@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV convention.
+
+Every benchmark module exposes ``run() -> list[Row]``; benchmarks/run.py
+prints one ``name,us_per_call,derived`` CSV line per row (the scaffold
+contract): ``us_per_call`` measures the benchmark's own compute call and
+``derived`` carries the headline metric being reproduced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Any
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6

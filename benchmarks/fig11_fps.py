@@ -1,0 +1,54 @@
+"""Paper Figs. 11 & 12: FPS and FPS/W vs AMW/MAW, batch 1 and 256.
+
+Derived metrics are the paper's headline gmean ratios: HEANA-OS vs the
+best dataflow of each baseline, gmean over the four CNNs.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core import perf_model as pm
+from repro.core.types import Dataflow
+from repro.models.cnn import CNN_ZOO
+
+
+def _suite(batch: int, dr: float):
+    table = {}
+    for name, fn in CNN_ZOO.items():
+        layers = fn()
+        for be in ("heana", "amw", "maw"):
+            for flow in Dataflow:
+                acc = pm.AcceleratorConfig.equal_area(be, flow, dr)
+                table[(name, be, flow.value)] = pm.cnn_inference(
+                    layers, acc, batch)
+    return table
+
+
+def run(batches=(1, 256), drs=(1.0, 5.0, 10.0)) -> List[Row]:
+    rows: List[Row] = []
+    for batch in batches:
+        fig = "fig11" if batch == 1 else "fig12"
+        for dr in drs:
+            table, us = timed(_suite, batch, dr)
+            for metric, attr in (("fps", "fps"), ("fpsw", "fps_per_watt")):
+                for base in ("amw", "maw"):
+                    ratios = []
+                    for cnn in CNN_ZOO:
+                        h = getattr(table[(cnn, "heana", "os")], attr)
+                        b = max(getattr(table[(cnn, base, f.value)], attr)
+                                for f in Dataflow)
+                        ratios.append(h / b)
+                    rows.append(Row(
+                        f"{fig}/{metric}/heana_os_vs_{base}/dr{int(dr)}",
+                        us, round(pm.gmean(ratios), 1)))
+            # absolute FPS of HEANA-OS on ResNet50 (anchor row)
+            rows.append(Row(f"{fig}/abs_fps/heana_os/resnet50/dr{int(dr)}",
+                            us, round(table[("resnet50", "heana",
+                                             "os")].fps, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

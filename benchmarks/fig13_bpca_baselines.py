@@ -1,0 +1,54 @@
+"""Paper Figs. 13 & 14: HEANA vs BPCA-integrated AMW/MAW baselines.
+
+The BPCA is the paper's portable contribution — bolting it onto the
+baselines shrinks HEANA's margin (psum traffic gone) but cannot recover
+the thermo-optic weight-actuation cost.  Derived: gmean FPS / FPS/W
+ratios vs the *upgraded* baselines, batch 1 and 256.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core import perf_model as pm
+from repro.core.types import Dataflow
+from repro.models.cnn import CNN_ZOO
+
+
+def _ratios(batch: int, dr: float):
+    out = {}
+    for base in ("amw", "maw"):
+        fps_r, w_r = [], []
+        for cnn, fn in CNN_ZOO.items():
+            layers = fn()
+            h = pm.cnn_inference(layers, pm.AcceleratorConfig.equal_area(
+                "heana", Dataflow.OS, dr), batch)
+            best_fps = best_w = 0.0
+            for flow in Dataflow:
+                r = pm.cnn_inference(layers, pm.AcceleratorConfig.equal_area(
+                    f"{base}_bpca", flow, dr), batch)
+                best_fps = max(best_fps, r.fps)
+                best_w = max(best_w, r.fps_per_watt)
+            fps_r.append(h.fps / best_fps)
+            w_r.append(h.fps_per_watt / best_w)
+        out[base] = (pm.gmean(fps_r), pm.gmean(w_r))
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for batch, fig in ((1, "fig13"), (256, "fig14")):
+        for dr in (1.0, 5.0, 10.0):
+            res, us = timed(_ratios, batch, dr)
+            for base, (fps_g, w_g) in res.items():
+                rows.append(Row(f"{fig}/fps/heana_vs_{base}_bpca/dr{int(dr)}",
+                                us, round(fps_g, 1)))
+                rows.append(Row(
+                    f"{fig}/fpsw/heana_vs_{base}_bpca/dr{int(dr)}",
+                    us, round(w_g, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,35 @@
+"""Paper Fig. 1 table: buffer accesses per dataflow, GoogleNet layer 5."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core import dataflow as df
+from repro.models.cnn import googlenet_layer5
+
+
+def run() -> List[Row]:
+    l5 = googlenet_layer5()
+    g = df.GemmShape(l5.c, l5.k, l5.d)
+    rows: List[Row] = []
+    for bpca in (False, True):
+        table, us = timed(df.fig1_table, g, 83, bpca)
+        tag = "bpca" if bpca else "nobpca"
+        for flow, counts in table.items():
+            rows.append(Row(f"fig1/{tag}/{flow}/total", us, counts["total"]))
+            rows.append(Row(f"fig1/{tag}/{flow}/psum", us,
+                            counts["psum_accesses"]))
+    # orderings the paper's table demonstrates
+    t = df.fig1_table(g, 83, False)
+    rows.append(Row("fig1/ws_min_weight_reads", 0.0,
+                    int(t["ws"]["weight_reads"] ==
+                        min(x["weight_reads"] for x in t.values()))))
+    rows.append(Row("fig1/is_min_input_reads", 0.0,
+                    int(t["is"]["input_reads"] ==
+                        min(x["input_reads"] for x in t.values()))))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,29 @@
+"""Paper Fig. 9 + Table 2: achievable DPU size N(B, DR) per organization."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+from repro.core import scalability
+
+PAPER_ANCHORS = {  # (backend, bits, dr) -> paper N
+    ("heana", 4, 1.0): 83, ("heana", 4, 5.0): 42, ("heana", 4, 10.0): 30,
+    ("amw", 4, 1.0): 36, ("amw", 4, 5.0): 17, ("amw", 4, 10.0): 12,
+    ("maw", 4, 1.0): 43, ("maw", 4, 5.0): 21, ("maw", 4, 10.0): 15,
+}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    surface, us = timed(scalability.fig9_surface)
+    for (be, b, dr), n in sorted(surface.items()):
+        rows.append(Row(f"fig9/{be}/b{b}/dr{int(dr)}", us / len(surface), n))
+    hits = sum(1 for k, v in PAPER_ANCHORS.items()
+               if abs(surface[k] - v) <= 1)
+    rows.append(Row("fig9/anchors_within_1", us, f"{hits}/9"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

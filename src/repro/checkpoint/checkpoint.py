@@ -1,0 +1,128 @@
+"""Atomic, restart-safe distributed checkpointing.
+
+Layout (one directory per step):
+    <root>/step_000120.tmp/        # staged writes
+        manifest.json              # tree structure, shapes, dtypes, step
+        arrays.npz                 # flat param/opt tensors (host-gathered)
+    <root>/step_000120/            # atomic rename after fsync
+
+Guarantees:
+  * atomicity — a checkpoint either fully exists or not at all (tmp dir +
+    os.replace); a crash mid-save never corrupts the latest good step;
+  * resumability — ``latest_step``/``restore`` pick up the newest complete
+    checkpoint, and the data pipeline's statelessness makes the resumed
+    run bit-identical;
+  * integrity — manifest records per-array checksums, verified on restore;
+  * retention — keep_last N (default 3) with the best-loss step pinned.
+
+On a real multi-host cluster each host would write its local shards
+(process-local jax.Array pieces); here the single process fully gathers.
+The interface is the same either way.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, upcast: bool = True) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if upcast and (arr.dtype.kind == "V" or
+                       "bfloat16" in str(arr.dtype)):
+            # np.savez stores bf16 as raw void bytes it can't cast back —
+            # store losslessly upcast, restore() casts to the template.
+            arr = np.asarray(jax.numpy.asarray(arr).astype(jax.numpy.float32))
+        flat[key] = arr
+    return flat
+
+
+def save(root: str, step: int, tree: Any, extra: Optional[dict] = None
+         ) -> str:
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "treedef": str(jax.tree_util.tree_structure(tree)),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": zlib.crc32(v.tobytes()) & 0xFFFFFFFF}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)           # atomic publish
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(root)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(root, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(root: str, template: Any, step: Optional[int] = None,
+            verify: bool = True) -> Tuple[Any, dict]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_template = _flatten(template, upcast=False)
+    restored = {}
+    for k, tmpl in flat_template.items():
+        arr = data[k]
+        if verify:
+            want = manifest["arrays"][k]["crc32"]
+            got = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if want != got:
+                raise IOError(f"checksum mismatch for {k} in step {step}")
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch {k}: ckpt {arr.shape} vs "
+                             f"template {tmpl.shape}")
+        restored[k] = np.asarray(
+            jax.numpy.asarray(arr).astype(tmpl.dtype))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = list(flat_template.keys())
+    new_leaves = [restored[k] for k in keys]
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return tree, manifest
+
+
+def retain(root: str, keep_last: int = 3,
+           pin_step: Optional[int] = None) -> None:
+    """Delete all but the newest ``keep_last`` checkpoints (+ pinned)."""
+    if not os.path.isdir(root):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(root)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    doomed = steps[:-keep_last] if keep_last else steps
+    for s in doomed:
+        if pin_step is not None and s == pin_step:
+            continue
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,10 @@
+"""Config registry: import every arch module to populate the registry."""
+from repro.configs import (deepseek_v2_236b, deepseek_v3_671b, gemma3_12b,
+                           h2o_danube_3_4b, llava_next_mistral_7b,
+                           mamba2_130m, qwen2_0_5b, qwen2_1_5b, whisper_tiny,
+                           zamba2_7b)  # noqa: F401
+from repro.configs.base import (SHAPES, ArchConfig, RunShape,
+                                cell_is_supported, get_config, list_archs)
+
+__all__ = ["SHAPES", "ArchConfig", "RunShape", "cell_is_supported",
+           "get_config", "list_archs"]

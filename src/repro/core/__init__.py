@@ -1,0 +1,18 @@
+"""HEANA core: the paper's contribution as composable JAX modules."""
+from repro.core.types import (Backend, Dataflow, OpticalParams,
+                              PhotonicConfig, TPU_V5E, TpuTarget)
+from repro.core.photonic_gemm import (photonic_dot_general, device_level_dot,
+                                      detection_sigma, sample_noise,
+                                      noise_shape, num_chunks)
+from repro.core.scalability import (max_dpe_size, output_power_dbm,
+                                    fig9_surface, table2_dpu_config)
+from repro.core.taom import quantize, taom_multiply, encode_time_amplitude
+from repro.core import bpca, noise
+
+__all__ = [
+    "Backend", "Dataflow", "OpticalParams", "PhotonicConfig", "TPU_V5E",
+    "TpuTarget", "photonic_dot_general", "device_level_dot",
+    "detection_sigma", "sample_noise", "noise_shape", "num_chunks",
+    "max_dpe_size", "output_power_dbm", "fig9_surface", "table2_dpu_config",
+    "quantize", "taom_multiply", "encode_time_amplitude", "bpca", "noise",
+]

@@ -1,0 +1,106 @@
+"""BPCA — Balanced Photo-Charge Accumulator (paper §3.2.4).
+
+A BPCA is a balanced photodiode pair (one diode per aggregation lane) feeding
+a time-integrating receiver (TIR) with a bank of p capacitors:
+
+  * per 1 ns cycle, the BPD integrates all optical pulses that arrive on the
+    +/- lanes: the net photocharge is proportional to
+    sum(through areas) - sum(drop areas), i.e. a signed dot-product psum of
+    up to N (wavelengths) x 10 (OS coherent pulses) products;
+  * the TIR accrues that charge on a selected capacitor, so psums belonging
+    to the same output accumulate *in the analog domain* across cycles —
+    no per-psum ADC, no psum buffer, no reduction network;
+  * one ADC conversion happens per finished output value.
+
+The capacitor-selection policy is dataflow dependent (OS: same capacitor for
+consecutive cycles; IS/WS: rotate capacitors each cycle).  That policy has no
+numerical effect (each output still sees exactly its own psums) but drives
+the perf model's event counts.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_mod
+from repro.core.types import (BPCA_NUM_CAPACITORS, OS_COHERENT_PULSES_PER_CYCLE,
+                              Dataflow, PhotonicConfig, dbm_to_watt)
+
+
+def detection_sigma_int(cfg: PhotonicConfig, p_pd_dbm: float) -> float:
+    """Gaussian sigma of one BPD integration cycle, in integer product units.
+
+    ``p_pd_dbm`` is the per-wavelength optical power at the photodiode (the
+    link budget of Eq. 3 already contains the 10 log10(N) comb split).  The
+    ENOB relation (Eqs. 1-2) demands that a single wavelength's full-scale
+    product (qmax^2 integer units) be resolvable to B bits at that power, so
+    the relative noise of one integration is 1/SNR of that full scale.  The
+    noise is thermal-dominated at these powers, i.e. one draw per BPD
+    integration cycle — NOT one per wavelength — which is why the N-way WDM
+    sum rides the same noise floor (the BPCA's whole point).
+    """
+    sigma_rel = noise_mod.relative_noise_sigma(
+        p_pd_dbm, cfg.data_rate_gsps, cfg.optics)
+    full_scale = float(cfg.qmax) ** 2
+    return full_scale * sigma_rel
+
+
+def integrate_cycle(through: jnp.ndarray, drop: jnp.ndarray,
+                    axis: int = -1) -> jnp.ndarray:
+    """One BPD integration: net photocharge of a cycle's pulse ensemble."""
+    return jnp.sum(through, axis=axis) - jnp.sum(drop, axis=axis)
+
+
+def accumulate(psums: jnp.ndarray, *, cfg: PhotonicConfig,
+               sigma_int: float = 0.0,
+               key: Optional[jax.Array] = None,
+               chunk_axis: int = -1) -> jnp.ndarray:
+    """Analog temporal accumulation of per-cycle psums on one capacitor.
+
+    psums: (..., n_chunks) — the per-cycle BPD outputs that belong to the
+    same output value (OS dataflow keeps one capacitor selected for all of
+    them).  Each cycle contributes an independent detection-noise draw, so
+    the capacitor voltage carries noise sigma_int * sqrt(n_chunks).
+    """
+    total = jnp.sum(psums, axis=chunk_axis)
+    if key is not None and sigma_int > 0.0:
+        n_chunks = psums.shape[chunk_axis]
+        total = total + sigma_int * jnp.sqrt(float(n_chunks)) * \
+            jax.random.normal(key, total.shape, total.dtype)
+    return total
+
+
+def adc_readout(voltage: jnp.ndarray, adc_bits: int,
+                full_scale: jnp.ndarray) -> jnp.ndarray:
+    """Single ADC conversion of the accrued capacitor voltage.
+
+    ``full_scale`` is the programmable-gain range (symmetric).  The ADC
+    quantizes to 2^adc_bits uniform levels across [-FS, FS].
+    """
+    levels = (1 << adc_bits) - 1
+    fs = jnp.maximum(full_scale, 1e-12)
+    step = 2.0 * fs / levels
+    return jnp.clip(jnp.round(voltage / step), -(levels // 2 + levels % 2),
+                    levels // 2 + levels % 2) * step
+
+
+def capacitor_schedule(dataflow: Dataflow, n_cycles: int,
+                       outputs_per_cycle: int = 1) -> Tuple[int, int]:
+    """(distinct capacitors used, ADC conversions) over an accumulation window.
+
+    OS: one capacitor held for the whole window -> 1 conversion at the end.
+    IS/WS: consecutive cycles belong to different outputs -> a capacitor per
+    in-flight output (bounded by the bank size), still one conversion per
+    finished output, but the bank must cover ``n_cycles`` in-flight outputs.
+    """
+    if dataflow == Dataflow.OS:
+        return 1, 1
+    caps = min(n_cycles * outputs_per_cycle, BPCA_NUM_CAPACITORS)
+    return caps, n_cycles * outputs_per_cycle
+
+
+def os_pulses_per_cycle() -> int:
+    """OS dataflow: 10x coherent pulse accumulation headroom (paper §3.2.4)."""
+    return OS_COHERENT_PULSES_PER_CYCLE

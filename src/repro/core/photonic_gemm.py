@@ -1,0 +1,224 @@
+"""Photonic GEMM numerics simulation — the paper's C1+C3 as a drop-in matmul.
+
+``photonic_dot_general(x, w, cfg, key)`` contracts the last axis of ``x``
+with the first axis of ``w`` the way a HEANA / AMW / MAW DPU would:
+
+  1. operands are symmetrically quantized to ``cfg.bits`` (weights get a
+     per-output-channel scale, activations a per-tensor scale),
+  2. the K dimension is tiled into DPE-sized chunks of ``cfg.dpe_size`` (=N,
+     the optical dot-product width — one temporal fold per chunk),
+  3. each chunk psum is an exact integer dot product (hitless TAOM array +
+     one BPD integration cycle) plus a Gaussian detection-noise draw whose
+     sigma comes from the link budget at the operating point (Eqs. 1-3),
+  4. accumulation policy:
+       * HEANA (and *_bpca variants): psums accrue on a BPCA capacitor in
+         the analog domain; ONE ADC conversion per output value.
+       * AMW / MAW: every chunk psum is ADC-converted immediately and the
+         chunks are reduced digitally (their DPUs have no charge-domain
+         accumulator) — quantization error is injected once per chunk.
+       * int_quant: exact integer accumulate, float readout (ideal int-B
+         reference used by the Table 4 experiment).
+       * exact: plain matmul (no photonics at all).
+  5. the result is rescaled to float by the operand scales.
+
+Differentiability: the simulation is wrapped in a straight-through-estimator
+``custom_vjp`` (gradients of an exact matmul), which makes every model in
+the zoo trainable *through* the photonic numerics (photonic-aware QAT — a
+beyond-paper feature).
+
+This module is also the pure-jnp oracle for the Pallas kernel
+(``kernels/taom_gemm.py`` must match it bit-for-bit modulo float summation
+order when fed the same pre-sampled noise).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bpca, scalability
+from repro.core.taom import quantize
+from repro.core.types import Backend, PhotonicConfig
+
+ANALOG_CARRY_BACKENDS = (Backend.HEANA, Backend.HEANA_AMW_BPCA,
+                         Backend.HEANA_MAW_BPCA)
+CHUNK_ADC_BACKENDS = (Backend.AMW, Backend.MAW)
+
+
+def operating_pd_power_dbm(cfg: PhotonicConfig) -> float:
+    """Optical power at the photodiode for the configured DPE size."""
+    if cfg.pd_power_dbm is not None:
+        return cfg.pd_power_dbm
+    key = cfg.backend.value.replace("_bpca", "")
+    if key == "exact" or key == "int_quant":
+        key = "heana"
+    from repro.core.types import NETWORK_PENALTY_DB
+    return scalability.output_power_dbm(
+        cfg.dpe_size, cfg.dpe_size, NETWORK_PENALTY_DB[key], cfg.optics,
+        scalability.obl_passes_for(key))
+
+
+def detection_sigma(cfg: PhotonicConfig) -> float:
+    """Per-cycle detection-noise sigma in integer product units."""
+    if not cfg.noise_enabled:
+        return 0.0
+    return bpca.detection_sigma_int(cfg, operating_pd_power_dbm(cfg))
+
+
+def design_point(backend: Backend, bits: int, data_rate_gsps: float,
+                 **overrides) -> PhotonicConfig:
+    """A self-consistent PhotonicConfig at the scalability design point.
+
+    Chooses N = max_dpe_size(backend, bits, DR), at which the link-budget
+    power delivers exactly ``bits`` ENOB (paper Fig. 9 operating points).
+    Falls back to N=1 when the precision is optically infeasible.
+    """
+    key = backend.value.replace("_bpca", "")
+    n = scalability.max_dpe_size(key, bits, data_rate_gsps)
+    return PhotonicConfig(backend=backend, bits=bits, dpe_size=max(n, 1),
+                          data_rate_gsps=data_rate_gsps, **overrides)
+
+
+def num_chunks(k: int, cfg: PhotonicConfig) -> int:
+    return max(1, math.ceil(k / cfg.dpe_size))
+
+
+def noise_shape(x_shape: Tuple[int, ...], w_shape: Tuple[int, ...],
+                cfg: PhotonicConfig) -> Tuple[int, ...]:
+    """Shape of the pre-sampled standard-normal noise tensor.
+
+    HEANA-style analog carry needs one draw per output element; chunk-ADC
+    backends need one draw per (chunk, output) because noise interacts with
+    the per-chunk rounding.
+    """
+    batch = x_shape[:-1]
+    d = w_shape[-1]
+    if cfg.backend in CHUNK_ADC_BACKENDS:
+        return (*batch, num_chunks(x_shape[-1], cfg), d)
+    return (*batch, d)
+
+
+def sample_noise(key: jax.Array, x_shape: Tuple[int, ...],
+                 w_shape: Tuple[int, ...], cfg: PhotonicConfig,
+                 dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, noise_shape(x_shape, w_shape, cfg), dtype)
+
+
+def _chunked(q: jnp.ndarray, n: int, n_chunks: int, axis_last: bool
+             ) -> jnp.ndarray:
+    """Zero-pad K to n_chunks*n and reshape into chunks."""
+    k = q.shape[-1] if axis_last else q.shape[0]
+    pad = n_chunks * n - k
+    if axis_last:
+        if pad:
+            q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+        return q.reshape(*q.shape[:-1], n_chunks, n)
+    if pad:
+        q = jnp.pad(q, [(0, pad)] + [(0, 0)] * (q.ndim - 1))
+    return q.reshape(n_chunks, n, *q.shape[1:])
+
+
+def _simulate(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
+              cfg: PhotonicConfig) -> jnp.ndarray:
+    """Forward photonic simulation.  noise: standard normal, pre-sampled."""
+    if cfg.backend == Backend.EXACT:
+        return x @ w
+
+    f32 = jnp.float32
+    xq, sx = quantize(x.astype(f32), cfg.bits, axis=None)          # scalar
+    wq, sw = quantize(w.astype(f32), cfg.bits, axis=0)             # (1, D)
+    k = x.shape[-1]
+    n_chunks = num_chunks(k, cfg)
+    xc = _chunked(xq, cfg.dpe_size, n_chunks, axis_last=True)      # (...,C,N)
+    wc = _chunked(wq, cfg.dpe_size, n_chunks, axis_last=False)     # (C,N,D)
+    # One BPD integration cycle per chunk: exact integer psum.
+    psums = jnp.einsum("...cn,cnd->...cd", xc, wc,
+                       preferred_element_type=f32)                 # (...,C,D)
+    sigma = detection_sigma(cfg)
+
+    if cfg.backend == Backend.INT_QUANT:
+        total = jnp.sum(psums, axis=-2)
+    elif cfg.backend in CHUNK_ADC_BACKENDS:
+        # AMW/MAW: noise + ADC per chunk, digital reduction.
+        noisy = psums + sigma * noise
+        fs = jax.lax.stop_gradient(jnp.max(jnp.abs(noisy)))
+        quantized = bpca.adc_readout(noisy, cfg.adc_bits, fs)
+        total = jnp.sum(quantized, axis=-2)
+    else:
+        # HEANA: analog carry across chunks (BPCA), single ADC per output.
+        acc = jnp.sum(psums, axis=-2)
+        acc = acc + sigma * jnp.sqrt(float(n_chunks)) * noise
+        fs = jax.lax.stop_gradient(jnp.max(jnp.abs(acc)))
+        total = bpca.adc_readout(acc, cfg.adc_bits, fs)
+
+    return (total * (sx * sw)).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ste_dot(x, w, noise, cfg):
+    return _simulate(x, w, noise, cfg)
+
+
+def _ste_fwd(x, w, noise, cfg):
+    return _simulate(x, w, noise, cfg), (x, w)
+
+
+def _ste_bwd(cfg, res, g):
+    x, w = res
+    gx = jnp.einsum("...d,kd->...k", g, w).astype(x.dtype)
+    batch = tuple(range(g.ndim - 1))
+    gw = jnp.tensordot(x, g, axes=(batch, batch)).astype(w.dtype)
+    return gx, gw, None
+
+
+_ste_dot.defvjp(_ste_fwd, _ste_bwd)
+
+
+def photonic_dot_general(x: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
+                         key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Drop-in matmul with HEANA/AMW/MAW numerics (see module docstring).
+
+    x: (..., K), w: (K, D) -> (..., D).  ``key`` enables detection noise;
+    with ``key=None`` (or cfg.noise_enabled=False) the simulation is
+    deterministic (quantization + accumulation policy only).
+    """
+    if cfg.backend == Backend.EXACT:
+        return x @ w
+    if key is not None and cfg.noise_enabled:
+        noise = sample_noise(key, x.shape, w.shape, cfg)
+    else:
+        noise = jnp.zeros(noise_shape(x.shape, w.shape, cfg), jnp.float32)
+    return _ste_dot(x, w, noise, cfg)
+
+
+def device_level_dot(x: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Explicit TAOM->lanes->BPCA path (device-level, HEANA backend only).
+
+    Slower but structurally faithful: used by tests to pin the fused
+    ``photonic_dot_general`` to the device model.
+    """
+    from repro.core import taom as taom_mod
+    assert cfg.backend in ANALOG_CARRY_BACKENDS
+    f32 = jnp.float32
+    xq, sx = quantize(x.astype(f32), cfg.bits, axis=None)
+    wq, sw = quantize(w.astype(f32), cfg.bits, axis=0)
+    k = x.shape[-1]
+    n_chunks = num_chunks(k, cfg)
+    xc = _chunked(xq, cfg.dpe_size, n_chunks, axis_last=True)   # (...,C,N)
+    wc = _chunked(wq, cfg.dpe_size, n_chunks, axis_last=False)  # (C,N,D)
+    # Explicit per-wavelength TAOM products on the balanced lanes, then one
+    # BPD integration per chunk cycle: (...,C,N,1) * (C,N,D) -> (...,C,N,D).
+    prod_through, prod_drop = taom_mod.taom_array_products(
+        xc[..., :, :, None], wc, cfg)
+    psums = bpca.integrate_cycle(prod_through, prod_drop, axis=-2)  # (...,C,D)
+    sigma = detection_sigma(cfg)
+    noise_key = key if (key is not None and cfg.noise_enabled) else None
+    acc = bpca.accumulate(jnp.moveaxis(psums, -2, -1), cfg=cfg,
+                          sigma_int=sigma, key=noise_key, chunk_axis=-1)
+    fs = jnp.max(jnp.abs(acc))
+    total = bpca.adc_readout(acc, cfg.adc_bits, fs)
+    return (total * (sx * sw)).astype(x.dtype)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+# init) — deliverable e, MULTI-POD DRY-RUN step 0.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct only — nothing
+is allocated), jits the right step function with explicit in_shardings,
+compiles it, and records:
+
+  * memory_analysis()        -> bytes per device (proves it fits)
+  * cost_analysis()          -> HLO FLOPs / bytes for §Roofline
+  * compiled HLO text scan   -> per-collective-kind byte volumes
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>.json and a summary
+line per cell is printed.  Idempotent: existing JSONs are skipped unless
+--force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single --force
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_is_supported, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo as zoo
+from repro.models import moe as moe_mod
+from repro.optim import optimizer as opt
+from repro.parallel import sharding as shd
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    shape_re = re.compile(r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = shape_re.search(stripped)
+        if not m:
+            continue
+        op = None
+        for k in COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", stripped):
+                op = k
+                break
+        if op is None or "-done(" in stripped:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        nbytes = DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def convert_bytes(hlo_text: str) -> int:
+    """Output bytes of dtype-convert ops.
+
+    XLA:CPU emulates bf16 dots by converting operands to f32 — traffic a
+    real TPU (native bf16 MXU) never sees.  The roofline reports a
+    TPU-adjusted memory term that subtracts 1.5x these bytes (f32 output +
+    half-size bf16 input) as the documented upper/lower bracket.
+    """
+    total = 0
+    pat = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bconvert\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        nb = DTYPE_BYTES.get(m.group(1), 4)
+        for d in m.group(2).split(","):
+            if d:
+                nb *= int(d)
+        total += nb
+    return total
+
+
+def _abstract_params(cfg):
+    return zoo.init_params(cfg, jax.random.PRNGKey(0), abstract=True)
+
+
+def _abstract_opt_state(abs_params):
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abs_params)
+    return opt.AdamState(jax.ShapeDtypeStruct((), jnp.int32), f32,
+                         jax.tree.map(lambda s: s, f32))
+
+
+def build_step(cfg, shape, mesh):
+    """Returns (fn, abstract_args, in_shardings, donate_argnums)."""
+    dist = moe_mod.DistCtx(mesh=mesh, data_axes=shd.data_axes(mesh))
+    abs_params = _abstract_params(cfg)
+    specs = zoo.param_specs(cfg)
+    # MoE giants need FSDP to fit; dense archs keep pure TP (DESIGN.md §5)
+    rules = shd.FSDP_RULES if cfg.moe is not None else None
+    p_shard = shd.param_shardings(specs, mesh, abs_params, rules)
+    adam_cfg = opt.AdamWConfig()
+
+    if shape.kind == "train":
+        abs_opt = _abstract_opt_state(abs_params)
+        # ZeRO-1: fp32 moments additionally sharded over the data axes.
+        m_shard = shd.zero1_shardings(specs, mesh, abs_params, rules)
+        o_shard = opt.AdamState(shd.replicated(mesh), m_shard, m_shard)
+        batch = zoo.input_specs(cfg, shape)
+        b_shard = {k: shd.batch_pspec(mesh, v) for k, v in batch.items()}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(zoo.loss_fn)(
+                params, batch, cfg, dist=dist)
+            params, opt_state, metrics = opt.apply(adam_cfg, params,
+                                                   opt_state, grads)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        return (train_step, (abs_params, abs_opt, batch),
+                (p_shard, o_shard, b_shard), (0, 1))
+
+    if shape.kind == "prefill":
+        batch = zoo.input_specs(cfg, shape)
+        b_shard = {k: shd.batch_pspec(mesh, v) for k, v in batch.items()}
+
+        def prefill_step(params, batch):
+            caches = zoo.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                     jnp.dtype(cfg.dtype))
+            logits, state = zoo.prefill_fn(params, batch, cfg, caches,
+                                           dist=dist)
+            return logits, state
+
+        return prefill_step, (abs_params, batch), (p_shard, b_shard), ()
+
+    # decode
+    inputs = zoo.input_specs(cfg, shape)
+    state = zoo.cache_specs(cfg, shape)
+    c_shard = shd.cache_shardings(state, mesh, shape.global_batch)
+    tok_shard = shd.batch_pspec(mesh, inputs["token"]) \
+        if shape.global_batch % mesh.shape[shd.data_axes(mesh)[0]] == 0 \
+        else shd.replicated(mesh)
+    i_shard = shd.replicated(mesh)
+
+    def serve_step(params, state, token, index):
+        logits, new_state = zoo.decode_fn(params, token, index, cfg, state,
+                                          dist=dist)
+        return logits, new_state
+
+    return (serve_step, (abs_params, state, inputs["token"],
+                         inputs["index"]),
+            (p_shard, c_shard, tok_shard, i_shard), (1,))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False
+             ) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, in_sh, donate = build_step(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_dev = mesh.devices.size
+        mem_rec = {}
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                mem_rec[k] = getattr(mem, k, None)
+        rec.update(
+            status="ok",
+            devices=n_dev,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=cost.get("flops") if cost else None,
+            bytes_accessed=cost.get("bytes accessed") if cost else None,
+            memory=mem_rec,
+            collectives=coll,
+            hlo_size=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=(None, "single", "multi"))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(list_archs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.force)
+                flops = rec.get("flops")
+                print(f"{arch:24s} {shape:12s} {mesh_kind:6s} "
+                      f"{rec['status']:7s} "
+                      f"flops={flops if flops else '-':>14} "
+                      f"coll={rec.get('collectives', {}).get('total_bytes', '-')}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  Single pod: 16x16 = 256
+chips, axes (data, model).  Multi-pod: 2x16x16 = 512 chips with a leading
+'pod' axis (outer data parallelism; gradient all-reduce crosses the pod
+boundary, which the multi-pod dry-run proves out).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever this host has — used by examples and integration tests."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,158 @@
+"""Runnable training driver (deliverable b's end-to-end path).
+
+Trains any registered arch (``--smoke`` for the reduced config on CPU) on
+the deterministic synthetic pipeline, with AdamW, checkpoint/restart,
+straggler tracking, and optional photonic-numerics QAT (``--numerics
+photonic_heana``).  The same step function lowers on the production mesh
+in dryrun.py — this driver is the real-execution twin.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --batch 8 --seq 64
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --steps 30 --numerics photonic_heana
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core.types import Backend, PhotonicConfig
+from repro.data.pipeline import DataConfig, make_source
+from repro.models import model_zoo as zoo
+from repro.models import moe as moe_mod
+from repro.models.layers import PhotonicCtx
+from repro.optim import optimizer as opt
+from repro.runtime.fault_tolerance import StragglerPolicy
+
+NUMERICS = {
+    "exact": None,
+    "int8": PhotonicConfig(backend=Backend.INT_QUANT, bits=8,
+                           noise_enabled=False),
+    "photonic_heana": PhotonicConfig(backend=Backend.HEANA, bits=8,
+                                     adc_bits=12, dpe_size=128,
+                                     noise_enabled=False),
+    "photonic_amw": PhotonicConfig(backend=Backend.AMW, bits=8, adc_bits=12,
+                                   dpe_size=64, noise_enabled=False),
+}
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps: int
+    first_loss: float
+    final_loss: float
+    tokens_per_s: float
+    ckpt_dir: Optional[str]
+
+
+def train(arch: str, smoke: bool = True, steps: int = 50, batch: int = 8,
+          seq: int = 64, lr: float = 1e-3, numerics: str = "exact",
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
+          resume: bool = False, log_every: int = 10,
+          seed: int = 0, total_steps: Optional[int] = None) -> TrainResult:
+    """``total_steps`` fixes the LR-schedule horizon independently of how
+    many steps this invocation runs — required for exact resume semantics
+    (a restarted run must see the same schedule)."""
+    cfg = get_config(arch, smoke=smoke)
+    horizon = total_steps or steps
+    adam = opt.AdamWConfig(lr=lr, warmup_steps=max(2, horizon // 20),
+                           total_steps=horizon)
+    pcfg = NUMERICS[numerics]
+    ctx = PhotonicCtx(cfg=pcfg, impl="ref") if pcfg else PhotonicCtx()
+
+    params = zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    state = opt.init(params)
+    start_step = 0
+    if resume and ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        (params, state), manifest = ckpt.restore(
+            ckpt_dir, (params, state))
+        start_step = manifest["step"]
+        print(f"resumed from step {start_step}")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                          global_batch=batch, seed=seed)
+    source = make_source(data_cfg)
+
+    @jax.jit
+    def train_step(params, state, tokens, targets):
+        def loss_fn(p):
+            return zoo.loss_fn(p, {"tokens": tokens, "targets": targets},
+                               cfg, ctx=ctx, dist=moe_mod.LOCAL)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state, metrics = opt.apply(adam, params, state, grads)
+        return params, state, loss, metrics
+
+    straggler = StragglerPolicy()
+    first_loss = final_loss = float("nan")
+    tokens_total = 0
+    t0 = time.time()
+    for step in range(start_step, steps):
+        b = source.batch(step)
+        ts = time.time()
+        extra = {}
+        if cfg.family == "audio":
+            extra["frames"] = jnp.zeros(
+                (batch, cfg.encoder_seq, zoo.WHISPER_FRAME_FEAT),
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            extra["patches"] = jnp.zeros(
+                (batch, cfg.num_image_tokens, cfg.vision_embed_dim),
+                jnp.dtype(cfg.dtype))
+        if extra:
+            loss, grads = jax.value_and_grad(zoo.loss_fn)(
+                params, {"tokens": jnp.asarray(b["tokens"]),
+                         "targets": jnp.asarray(b["targets"]), **extra},
+                cfg, ctx=ctx)
+            params, state, metrics = opt.apply(adam, params, state, grads)
+        else:
+            params, state, loss, metrics = train_step(
+                params, state, jnp.asarray(b["tokens"]),
+                jnp.asarray(b["targets"]))
+        loss = float(loss)
+        straggler.record("host0", time.time() - ts)
+        straggler.update_strikes()
+        tokens_total += batch * seq
+        if step == start_step:
+            first_loss = loss
+        final_loss = loss
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, (params, state),
+                      extra={"loss": loss})
+            ckpt.retain(ckpt_dir, keep_last=3)
+    dt = time.time() - t0
+    return TrainResult(steps - start_step, first_loss, final_loss,
+                       tokens_total / max(dt, 1e-9), ckpt_dir)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--numerics", default="exact", choices=list(NUMERICS))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    res = train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                args.lr, args.numerics, args.ckpt_dir, resume=args.resume)
+    print(f"done: loss {res.first_loss:.4f} -> {res.final_loss:.4f} "
+          f"({res.tokens_per_s:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

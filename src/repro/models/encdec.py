@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment's modality-stub contract, the conv frontend is a STUB:
+``encode`` consumes precomputed frame embeddings (B, frames, d_model-ready
+features are projected in).  Everything downstream — bidirectional encoder,
+causal decoder with cross-attention, serving caches — is real.
+
+Whisper details kept: learned positional embeddings (no RoPE), GELU MLPs,
+LayerNorm (not RMSNorm), pre-norm blocks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import make_stacked
+
+
+def _spec(cfg: ArchConfig, causal: bool, use_rope: bool = False) -> A.AttnSpec:
+    return A.AttnSpec(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                      num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.resolved_head_dim, causal=causal,
+                      use_rope=use_rope, qkv_bias=True)
+
+
+def init_params(cfg: ArchConfig, key: Optional[jax.Array],
+                abstract: bool = False) -> dict:
+    maker = L.ParamMaker(key, dtype=jnp.dtype(cfg.dtype), abstract=abstract)
+    d = cfg.d_model
+
+    def enc_block(mk, nm):
+        return {"ln1": L.make_layer_norm(mk, f"{nm}.ln1", d),
+                "attn": A.make_attention(mk, f"{nm}.attn", _spec(cfg, False)),
+                "ln2": L.make_layer_norm(mk, f"{nm}.ln2", d),
+                "ffn": L.make_mlp(mk, f"{nm}.ffn", d, cfg.d_ff, gated=False)}
+
+    def dec_block(mk, nm):
+        return {"ln1": L.make_layer_norm(mk, f"{nm}.ln1", d),
+                "self_attn": A.make_attention(mk, f"{nm}.self",
+                                              _spec(cfg, True)),
+                "ln_x": L.make_layer_norm(mk, f"{nm}.lnx", d),
+                "cross_attn": A.make_attention(mk, f"{nm}.cross",
+                                               _spec(cfg, False)),
+                "ln2": L.make_layer_norm(mk, f"{nm}.ln2", d),
+                "ffn": L.make_mlp(mk, f"{nm}.ffn", d, cfg.d_ff, gated=False)}
+
+    return {
+        "frame_proj": L.make_dense(maker, "frame_proj",
+                                   cfg.vision_embed_dim or 80, d,
+                                   (None, L.EMBED)),
+        "enc_pos": maker.param("enc_pos", (cfg.encoder_seq, d),
+                               (None, L.EMBED), scale=0.02),
+        "encoder": make_stacked(maker, "encoder", cfg.encoder_layers,
+                                enc_block),
+        "enc_ln": L.make_layer_norm(maker, "enc_ln", d),
+        "embed": L.make_embedding(maker, "embed", cfg.vocab_size, d),
+        # sized for the assigned decode_32k cell (cache 32768 + headroom);
+        # real Whisper caps at 448 target positions (DESIGN.md §4)
+        "dec_pos": maker.param("dec_pos", (33024, d), (None, L.EMBED),
+                               scale=0.02),
+        "decoder": make_stacked(maker, "decoder", cfg.num_layers, dec_block),
+        "dec_ln": L.make_layer_norm(maker, "dec_ln", d),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    return init_params(cfg, key=None)
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ArchConfig,
+           ctx: L.PhotonicCtx = L.EXACT_CTX) -> jnp.ndarray:
+    """frames: (B, T_frames, feat) precomputed frontend features (STUB)."""
+    b, t, _ = frames.shape
+    x = L.dense(params["frame_proj"], frames, ctx, "frame_proj")
+    x = x + params["enc_pos"][:t][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    spec = _spec(cfg, causal=False)
+
+    def block(x, p):
+        h, _ = A.attention(p["attn"], L.layer_norm(p["ln1"], x), positions,
+                           spec, ctx, "enc.attn")
+        x = x + h
+        x = x + L.mlp(p["ffn"], L.layer_norm(p["ln2"], x), ctx, "enc.ffn",
+                      act=jax.nn.gelu)
+        return x, None
+
+    # Whisper stacks are tiny (4 layers) — unroll so dry-run cost analysis
+    # is exact (XLA counts scan bodies once; see transformer._scan_group).
+    for i in range(cfg.encoder_layers):
+        x, _ = block(x, jax.tree.map(lambda a, i=i: a[i],
+                                     params["encoder"]))
+    return L.layer_norm(params["enc_ln"], x)
+
+
+def _decoder_pass(params, tokens, positions, enc_out, cfg, ctx,
+                  caches=None, cache_index=None):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(x.dtype)
+    self_spec = _spec(cfg, causal=True)
+    cross_spec = _spec(cfg, causal=False)
+
+    def block(x, p, cache):
+        c = cache["self"] if cache is not None else None
+        h, nc = A.attention(p["self_attn"], L.layer_norm(p["ln1"], x),
+                            positions, self_spec, ctx, "dec.self",
+                            c, cache_index)
+        x = x + h
+        h, _ = A.attention(p["cross_attn"], L.layer_norm(p["ln_x"], x),
+                           positions, cross_spec, ctx, "dec.cross",
+                           kv_source=enc_out)
+        x = x + h
+        x = x + L.mlp(p["ffn"], L.layer_norm(p["ln2"], x), ctx, "dec.ffn",
+                      act=jax.nn.gelu)
+        return x, ({"self": nc} if nc is not None else None)
+
+    ncs = []
+    for i in range(cfg.num_layers):
+        pick = lambda a, i=i: a[i]  # noqa: E731
+        p_i = jax.tree.map(pick, params["decoder"])
+        c_i = jax.tree.map(pick, caches) if caches is not None else None
+        x, nc = block(x, p_i, c_i)
+        ncs.append(nc)
+    new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                  if ncs and ncs[-1] is not None else None)
+    x = L.layer_norm(params["dec_ln"], x)
+    return L.unembed(params["embed"], x, ctx), new_caches
+
+
+def forward(params: dict, tokens: jnp.ndarray, frames: jnp.ndarray,
+            cfg: ArchConfig, ctx: L.PhotonicCtx = L.EXACT_CTX
+            ) -> jnp.ndarray:
+    """Teacher-forced training pass: (B,S) tokens + (B,T,feat) frames."""
+    b, s = tokens.shape
+    enc_out = encode(params, frames, cfg, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    logits, _ = _decoder_pass(params, tokens, positions, enc_out, cfg, ctx)
+    return logits
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    spec = _spec(cfg, causal=True)
+    one = {"self": A.init_cache(spec, batch, max_len, dtype)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+
+
+def prefill(params: dict, tokens: jnp.ndarray, frames: jnp.ndarray,
+            cfg: ArchConfig, caches: dict,
+            ctx: L.PhotonicCtx = L.EXACT_CTX) -> Tuple[jnp.ndarray, dict,
+                                                       jnp.ndarray]:
+    b, s = tokens.shape
+    enc_out = encode(params, frames, cfg, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    logits, new_caches = _decoder_pass(params, tokens, positions, enc_out,
+                                       cfg, ctx, caches, cache_index=None)
+    return logits[:, -1:], new_caches, enc_out
+
+
+def decode_step(params: dict, token: jnp.ndarray, index: jnp.ndarray,
+                enc_out: jnp.ndarray, cfg: ArchConfig, caches: dict,
+                ctx: L.PhotonicCtx = L.EXACT_CTX) -> Tuple[jnp.ndarray, dict]:
+    b = token.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    return _decoder_pass(params, token, positions, enc_out, cfg, ctx,
+                         caches, cache_index=index)

@@ -1,0 +1,214 @@
+"""Base layers: parameter construction, photonic-routable dense, norms, RoPE.
+
+Parameters are plain nested dicts of jnp arrays.  ``ParamMaker`` builds them
+AND their logical sharding axes from a single code path:
+
+    maker = ParamMaker(key)          -> arrays (init mode)
+    maker = ParamMaker(None)         -> logical-axis tuples (spec mode)
+    maker = ParamMaker(key, abstract=True) -> ShapeDtypeStructs (dry-run)
+
+so the param tree and its PartitionSpec tree can never drift apart.
+
+``dense`` is the paper integration point: every projection in the zoo goes
+through it, and a ``PhotonicCtx`` reroutes the matmul through the HEANA /
+AMW / MAW numerics simulation (kernels.ops.photonic_matmul) — the paper's
+technique as a first-class numerics backend for any architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Backend, PhotonicConfig
+
+# Logical axis names (mapped to mesh axes in parallel/sharding.py).
+EMBED = "embed"      # d_model           -> replicated (activations row dim)
+MLP = "mlp"          # FFN hidden        -> model
+HEADS = "heads"      # attention heads   -> model
+KV_HEADS = "kv_heads"  # kv heads        -> model (or replicated if few)
+VOCAB = "vocab"      # vocabulary        -> model
+EXPERT = "expert"    # MoE experts       -> model (expert parallelism)
+SSM_INNER = "ssm_inner"  # mamba inner   -> model
+STACK = "stack"      # scanned layer stack -> replicated
+NONE = None
+
+
+class ParamMaker:
+    """Builds param trees (arrays / specs / abstract) from one code path."""
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.bfloat16,
+                 abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    @property
+    def spec_mode(self) -> bool:
+        return self.key is None
+
+    def _fold(self, name: str) -> jax.Array:
+        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+
+    def param(self, name: str, shape: Sequence[int], axes: Tuple,
+              init: str = "normal", scale: Optional[float] = None):
+        assert len(axes) == len(shape), (name, shape, axes)
+        if self.spec_mode:
+            return axes
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        if init == "embed":
+            fan_in = 1.0
+        s = scale if scale is not None else fan_in ** -0.5
+        return (jax.random.normal(self._fold(name), tuple(shape), jnp.float32)
+                * s).astype(self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicCtx:
+    """Routes zoo matmuls through the photonic numerics simulation.
+
+    cfg=None or backend=EXACT -> plain XLA matmul.  ``key`` enables the
+    detection-noise draw; each call site folds in its name so layers get
+    independent noise.  ``impl`` picks the Pallas kernel or jnp oracle.
+    """
+    cfg: Optional[PhotonicConfig] = None
+    key: Optional[jax.Array] = None
+    impl: str = "ref"
+
+    @property
+    def active(self) -> bool:
+        return self.cfg is not None and self.cfg.backend != Backend.EXACT
+
+    def site_key(self, name: str) -> Optional[jax.Array]:
+        if self.key is None:
+            return None
+        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+
+
+EXACT_CTX = PhotonicCtx()
+
+
+def dense(params, x: jnp.ndarray, ctx: PhotonicCtx = EXACT_CTX,
+          name: str = "dense") -> jnp.ndarray:
+    """(..., K) @ w[K, D] (+ b) — photonic-routable."""
+    w = params["w"]
+    if ctx.active:
+        from repro.kernels import ops as kops
+        out = kops.photonic_matmul(x, w, ctx.cfg, key=ctx.site_key(name),
+                                   impl=ctx.impl)
+    else:
+        out = x @ w
+    if "b" in params:
+        out = out + params["b"]
+    return out
+
+
+def make_dense(maker: ParamMaker, name: str, d_in: int, d_out: int,
+               axes: Tuple = (EMBED, MLP), bias: bool = False,
+               scale: Optional[float] = None) -> dict:
+    p = {"w": maker.param(f"{name}.w", (d_in, d_out), axes, scale=scale)}
+    if bias:
+        p["b"] = maker.param(f"{name}.b", (d_out,), (axes[1],), init="zeros")
+    return p
+
+
+def rms_norm(scale: jnp.ndarray, x: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def make_rms_norm(maker: ParamMaker, name: str, dim: int) -> jnp.ndarray:
+    return maker.param(f"{name}.scale", (dim,), (EMBED,), init="zeros")
+
+
+def layer_norm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32) +
+            params["b"].astype(jnp.float32)).astype(dt)
+
+
+def make_layer_norm(maker: ParamMaker, name: str, dim: int) -> dict:
+    return {"g": maker.param(f"{name}.g", (dim,), (EMBED,), init="ones"),
+            "b": maker.param(f"{name}.b", (dim,), (EMBED,), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+def make_embedding(maker: ParamMaker, name: str, vocab: int,
+                   dim: int) -> dict:
+    # GPT-style 0.02 init keeps tied-head logits near zero at init
+    # (CE starts at ~ln(V)).
+    return {"table": maker.param(f"{name}.table", (vocab, dim),
+                                 (VOCAB, EMBED), init="embed", scale=0.02)}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x: jnp.ndarray, ctx: PhotonicCtx = EXACT_CTX
+            ) -> jnp.ndarray:
+    """Logits projection.  Kept in exact numerics even under photonic ctx
+    (the paper quantizes conv/GEMM compute; classifier heads stay digital)."""
+    del ctx
+    return x @ params["table"].T
+
+
+def make_mlp(maker: ParamMaker, name: str, d_model: int, d_ff: int,
+             gated: bool = True) -> dict:
+    p = {"up": make_dense(maker, f"{name}.up", d_model, d_ff, (EMBED, MLP)),
+         "down": make_dense(maker, f"{name}.down", d_ff, d_model,
+                            (MLP, EMBED))}
+    if gated:
+        p["gate"] = make_dense(maker, f"{name}.gate", d_model, d_ff,
+                               (EMBED, MLP))
+    return p
+
+
+def mlp(params, x: jnp.ndarray, ctx: PhotonicCtx = EXACT_CTX,
+        name: str = "mlp", act=jax.nn.silu) -> jnp.ndarray:
+    up = dense(params["up"], x, ctx, f"{name}.up")
+    if "gate" in params:
+        gate = dense(params["gate"], x, ctx, f"{name}.gate")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return dense(params["down"], h, ctx, f"{name}.down")

@@ -1,0 +1,160 @@
+"""Uniform model API over all assigned architectures.
+
+Dispatches on ``cfg.family``:  'audio' -> encdec (Whisper), everything else
+-> transformer.  Exposes exactly what the launcher needs:
+
+    init_params / param_specs
+    loss_fn(params, batch, cfg, ...)          -- next-token CE (train_4k)
+    prefill_fn / decode_fn                    -- serving (prefill_*/decode_*)
+    input_specs(cfg, shape)                   -- ShapeDtypeStruct stand-ins
+    init_caches(cfg, batch, max_len)
+
+Batches are dicts: {"tokens", "targets"} (+ "frames" for audio, "patches"
+for vlm) — the modality frontends are stubs per the assignment, so frames /
+patches arrive as precomputed embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunShape
+from repro.models import encdec, transformer
+from repro.models import layers as L
+from repro.models import moe as M
+
+WHISPER_FRAME_FEAT = 80   # log-mel bins fed to the (stubbed) conv frontend
+
+
+def init_params(cfg: ArchConfig, key: Optional[jax.Array],
+                abstract: bool = False) -> dict:
+    if cfg.family == "audio":
+        return encdec.init_params(cfg, key, abstract)
+    return transformer.init_params(cfg, key, abstract)
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    if cfg.family == "audio":
+        return encdec.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+def _xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(params: dict, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            ctx: L.PhotonicCtx = L.EXACT_CTX, dist: M.DistCtx = M.LOCAL,
+            remat: bool = True, ssm_impl: str = "jax",
+            mtp_weight: float = 0.0) -> jnp.ndarray:
+    """Next-token CE (+ optional DeepSeek-V3 MTP auxiliary loss).
+
+    ``mtp_weight`` > 0 requires cfg.mtp_depth > 0; the MTP head is an
+    auxiliary training feature and is OFF in the dry-run/roofline cells
+    (the assigned shapes lower the primary train_step).
+    """
+    if cfg.family == "audio":
+        logits = encdec.forward(params, batch["tokens"], batch["frames"],
+                                cfg, ctx)
+        return _xent(logits, batch["targets"])
+    from repro.parallel import sharded_ce
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    use_sharded = sharded_ce.supports(cfg.vocab_size, dist)
+    # §Perf iteration 1: vocab-sharded CE — the (B,S,V) logits tensor
+    # never materializes replicated (see parallel/sharded_ce.py).
+    hidden = transformer.forward(
+        params, batch["tokens"], cfg, ctx, dist, remat=remat,
+        ssm_impl=ssm_impl, prefix_embeds=batch.get("patches"),
+        return_hidden=True)
+
+    def ce(h, targets):
+        if use_sharded:
+            return sharded_ce.sharded_xent(head["table"], h, targets, dist)
+        return _xent(h @ head["table"].T, targets)
+
+    loss = ce(hidden, batch["targets"])
+    if mtp_weight > 0.0 and cfg.mtp_depth > 0:
+        h_mtp = transformer.mtp_hidden(params, hidden, batch["tokens"], cfg,
+                                       ctx, dist)
+        loss = loss + mtp_weight * ce(h_mtp, batch["targets"][:, 1:])
+    return loss
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    if cfg.family == "audio":
+        return encdec.init_caches(cfg, batch, max_len, dtype)
+    return transformer.init_caches(cfg, batch, max_len, dtype)
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, caches,
+               ctx: L.PhotonicCtx = L.EXACT_CTX,
+               dist: M.DistCtx = M.LOCAL, ssm_impl: str = "jax"):
+    if cfg.family == "audio":
+        logits, caches, enc_out = encdec.prefill(
+            params, batch["tokens"], batch["frames"], cfg, caches, ctx)
+        return logits, {"layers": caches, "enc_out": enc_out}
+    logits, caches = transformer.prefill(
+        params, batch["tokens"], cfg, caches, ctx, dist, ssm_impl,
+        prefix_embeds=batch.get("patches"))
+    return logits, {"layers": caches}
+
+
+def decode_fn(params, token, index, cfg: ArchConfig, state,
+              ctx: L.PhotonicCtx = L.EXACT_CTX, dist: M.DistCtx = M.LOCAL):
+    if cfg.family == "audio":
+        logits, caches = encdec.decode_step(params, token, index,
+                                            state["enc_out"], cfg,
+                                            state["layers"], ctx)
+        return logits, {**state, "layers": caches}
+    logits, caches = transformer.decode_step(params, token, index, cfg,
+                                             state["layers"], ctx, dist)
+    return logits, {**state, "layers": caches}
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (dry-run input contract, deliverable e/f)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: RunShape) -> Dict[str, object]:
+    """Stand-ins for every model input of the step lowered for ``shape``.
+
+    train/prefill: full-sequence batch.  decode: one new token + the decode
+    state index (the KV cache itself is threaded as a donated argument whose
+    specs come from ``cache_specs``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, WHISPER_FRAME_FEAT),
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.vision_embed_dim),
+                jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one token against a cache of length shape.seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+            "index": jax.ShapeDtypeStruct((), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: RunShape) -> dict:
+    """Abstract cache pytree for decode cells (no allocation)."""
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len,
+                            jnp.dtype(cfg.dtype)))
+    state = {"layers": caches}
+    if cfg.family == "audio":
+        state["enc_out"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return state

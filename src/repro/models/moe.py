@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with shard_map expert parallelism (EP).
+
+DeepSeek-style: ``num_shared_experts`` always-on shared experts plus
+``num_experts`` routed experts with top-k routing.
+
+Distribution design (DESIGN.md §5): activations are batch-sharded over the
+data axes and *replicated* over the model axis, while expert weights are
+sharded over the model axis (EP).  Each model shard therefore selects the
+token->expert assignments that target ITS experts, computes them locally
+under a fixed capacity, and the shards' partial outputs are psum'd.  No
+(T, E, C) dispatch tensor is ever materialized — at DeepSeek-V3 scale that
+tensor would be ~5e13 elements, which is why the GShard einsum formulation
+is replaced by gather/scatter + a batched per-expert einsum.
+
+Everything is fully differentiable (sorts become gathers/scatters in the
+VJP), so photonic-aware QAT works through MoE layers too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """How a model apply() is distributed (None mesh = single process)."""
+    mesh: Optional[object] = None          # jax.sharding.Mesh
+    data_axes: tuple = ("data",)           # ("pod","data") when multi-pod
+    model_axis: str = "model"
+
+    @property
+    def model_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+LOCAL = DistCtx()
+
+
+def make_moe(maker: L.ParamMaker, name: str, d_model: int,
+             cfg: MoEConfig) -> dict:
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": maker.param(f"{name}.router", (d_model, e),
+                              (L.EMBED, L.EXPERT), scale=d_model ** -0.5),
+        "gate": maker.param(f"{name}.gate", (e, d_model, f),
+                            (L.EXPERT, L.EMBED, L.MLP)),
+        "up": maker.param(f"{name}.up", (e, d_model, f),
+                          (L.EXPERT, L.EMBED, L.MLP)),
+        "down": maker.param(f"{name}.down", (e, f, d_model),
+                            (L.EXPERT, L.MLP, L.EMBED)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.make_mlp(maker, f"{name}.shared", d_model,
+                                 cfg.num_shared_experts * f)
+    return p
+
+
+def _round8(x: int) -> int:
+    return max(8, ((x + 7) // 8) * 8)
+
+
+def _routed_local(router_w, gate_w, up_w, down_w, x, cfg: MoEConfig,
+                  n_shards: int, my_shard) -> jnp.ndarray:
+    """Routed-expert compute for ONE model shard (local expert slice).
+
+    x: (B, S, D) — this shard's replica of the activations.
+    gate/up/down: (E_loc, ...) local expert slice.  Returns this shard's
+    partial output (zeros for tokens routed elsewhere).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e_total = cfg.num_experts
+    e_loc = e_total // n_shards
+    xf = x.reshape(t, d)
+
+    logits = (xf @ router_w.astype(jnp.float32).astype(xf.dtype)) \
+        .astype(jnp.float32)                                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- select the (token, expert) slots owned by this shard ---
+    eid = top_e.reshape(t * k)
+    wgt = top_p.reshape(t * k)
+    owner = eid // e_loc
+    sel = owner == my_shard
+    cap = _round8(int(t * k * cfg.capacity_factor) // n_shards)
+    cap = min(cap, t * k)
+    order = jnp.argsort(~sel, stable=True)                    # selected first
+    slots = order[:cap]
+    valid = sel[slots]
+    token_ids = slots // k
+    e_local = jnp.where(valid, eid[slots] - my_shard * e_loc, 0)
+    w_slots = jnp.where(valid, wgt[slots], 0.0)
+
+    # --- group by local expert under a per-expert capacity ---
+    cap_e = _round8(int(cap * cfg.capacity_factor) // max(e_loc, 1))
+    grp = jax.nn.one_hot(e_local, e_loc, dtype=jnp.int32) * \
+        valid[:, None].astype(jnp.int32)                      # (cap, E_loc)
+    pos = jnp.take_along_axis(jnp.cumsum(grp, axis=0), e_local[:, None],
+                              axis=1)[:, 0] - 1               # (cap,)
+    keep = valid & (pos >= 0) & (pos < cap_e)
+    pos = jnp.clip(pos, 0, cap_e - 1)
+
+    xg = xf[token_ids] * keep[:, None].astype(xf.dtype)       # (cap, D)
+    disp = jnp.zeros((e_loc, cap_e, d), xf.dtype)
+    disp = disp.at[e_local, pos].add(xg)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, gate_w)) * \
+        jnp.einsum("ecd,edf->ecf", disp, up_w)
+    out_e = jnp.einsum("ecf,efd->ecd", h, down_w)             # (E_loc,Ce,D)
+
+    y_slots = out_e[e_local, pos] * (w_slots * keep)[:, None].astype(x.dtype)
+    yf = jnp.zeros((t, d), x.dtype).at[token_ids].add(y_slots)
+    return yf.reshape(b, s, d)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+            ctx: L.PhotonicCtx = L.EXACT_CTX, name: str = "moe",
+            dist: DistCtx = LOCAL) -> jnp.ndarray:
+    """Shared experts + routed experts.  See module docstring."""
+    shared = 0.0
+    if "shared" in params:
+        shared = L.mlp(params["shared"], x, ctx, f"{name}.shared")
+
+    if dist.mesh is None or dist.model_shards == 1:
+        routed = _routed_local(params["router"], params["gate"],
+                               params["up"], params["down"], x, cfg,
+                               n_shards=1, my_shard=0)
+        return shared + routed
+
+    from jax.experimental.shard_map import shard_map
+    n_shards = dist.model_shards
+    dspec = P(dist.data_axes)            # batch sharded, model replicated
+
+    def local_fn(router_w, gate_w, up_w, down_w, xl):
+        my = jax.lax.axis_index(dist.model_axis)
+        part = _routed_local(router_w, gate_w, up_w, down_w, xl, cfg,
+                             n_shards, my)
+        return jax.lax.psum(part, dist.model_axis)
+
+    routed = shard_map(
+        local_fn, mesh=dist.mesh,
+        in_specs=(P(), P(dist.model_axis), P(dist.model_axis),
+                  P(dist.model_axis), P(*dspec, None, None)),
+        out_specs=P(*dspec, None, None),
+        check_rep=False,
+    )(params["router"], params["gate"], params["up"], params["down"], x)
+    return shared + routed
+
+
+def load_balance_loss(params: dict, x: jnp.ndarray, cfg: MoEConfig
+                      ) -> jnp.ndarray:
+    """Switch-style auxiliary load-balancing loss (mean fraction * prob)."""
+    t_shape = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    probs = jax.nn.softmax(
+        (xf @ params["router"].astype(xf.dtype)).astype(jnp.float32), -1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, cfg.num_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    del t_shape
+    return cfg.num_experts * jnp.sum(frac * imp)

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD) block — arXiv:2405.21060, TPU-adapted via kernels/ssd_scan.
+
+Block: in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD scan
+(chunked — Pallas kernel on the serving path, differentiable jnp on the
+training path); gated RMSNorm; out_proj.
+
+Decode state: {"conv": (B, W-1, C_xbc), "ssm": (B, H, P, S)} — O(1) per
+token, which is what makes the SSM archs the long_500k cells.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def dims(d_model: int, s: SSMConfig):
+    d_inner = s.expand * d_model
+    n_heads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.state_dim
+    return d_inner, n_heads, d_xbc
+
+
+def make_mamba(maker: L.ParamMaker, name: str, d_model: int,
+               s: SSMConfig) -> dict:
+    d_inner, n_heads, d_xbc = dims(d_model, s)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads
+    return {
+        "in_proj": L.make_dense(maker, f"{name}.in_proj", d_model, d_in_proj,
+                                (L.EMBED, L.SSM_INNER)),
+        "conv_w": maker.param(f"{name}.conv_w", (s.conv_width, d_xbc),
+                              (None, L.SSM_INNER), scale=s.conv_width ** -0.5),
+        "conv_b": maker.param(f"{name}.conv_b", (d_xbc,), (L.SSM_INNER,),
+                              init="zeros"),
+        "dt_bias": maker.param(f"{name}.dt_bias", (n_heads,), (None,),
+                               init="zeros"),
+        "a_log": maker.param(f"{name}.a_log", (n_heads,), (None,),
+                             init="zeros"),
+        "d_skip": maker.param(f"{name}.d_skip", (n_heads,), (None,),
+                              init="ones"),
+        "norm": L.make_rms_norm(maker, f"{name}.norm", d_inner),
+        "out_proj": L.make_dense(maker, f"{name}.out_proj", d_inner, d_model,
+                                 (L.SSM_INNER, L.EMBED)),
+    }
+
+
+def init_state(d_model: int, s: SSMConfig, batch: int,
+               dtype=jnp.float32) -> dict:
+    d_inner, n_heads, d_xbc = dims(d_model, s)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_xbc), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim), dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv, width W.  history: (B, W-1, C) carried state."""
+    bsz, l, c = xbc.shape
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((bsz, width - 1, c), xbc.dtype)
+    xp = jnp.concatenate([history.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, i:i + l, :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _split(params, x, d_model, s: SSMConfig, ctx, name):
+    d_inner, n_heads, d_xbc = dims(d_model, s)
+    proj = L.dense(params["in_proj"], x, ctx, f"{name}.in_proj")
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + d_xbc], axis=-1)
+    return z, xbc, dt, d_inner, n_heads
+
+
+def mamba_block(params: dict, x: jnp.ndarray, d_model: int, s: SSMConfig,
+                ctx: L.PhotonicCtx = L.EXACT_CTX, name: str = "mamba",
+                state: Optional[dict] = None, return_state: bool = False,
+                impl: str = "jax") -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence Mamba2 block.  x: (B, L, D)."""
+    bsz, l, _ = x.shape
+    z, xbc_raw, dt, d_inner, n_heads = _split(params, x, d_model, s, ctx,
+                                              name)
+    conv_hist = None if state is None else state["conv"]
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"], conv_hist)
+    xs, b, c = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1)
+    p, g = s.head_dim, s.n_groups
+    heads_per_group = n_heads // g
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))            # (H,)
+
+    # flatten to (B*H, L, ...) for the kernel
+    xh = xs.reshape(bsz, l, n_heads, p).transpose(0, 2, 1, 3) \
+        .reshape(bsz * n_heads, l, p)
+    dth = dt.transpose(0, 2, 1).reshape(bsz * n_heads, l)
+    ah = jnp.tile(a, bsz)
+    bg = b.reshape(bsz, l, g, s.state_dim)
+    cg = c.reshape(bsz, l, g, s.state_dim)
+    bh = jnp.repeat(bg, heads_per_group, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * n_heads, l, s.state_dim)
+    ch = jnp.repeat(cg, heads_per_group, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * n_heads, l, s.state_dim)
+
+    y, final = kops.ssd_scan(xh.astype(jnp.float32), dth, ah,
+                             bh.astype(jnp.float32), ch.astype(jnp.float32),
+                             chunk=s.chunk, impl=impl)
+    y = y.reshape(bsz, n_heads, l, p).transpose(0, 2, 1, 3)
+    y = y + xh.reshape(bsz, n_heads, l, p).transpose(0, 2, 1, 3) * \
+        params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(params["out_proj"], y, ctx, f"{name}.out_proj")
+
+    new_state = None
+    if return_state:
+        hist = (jnp.zeros((bsz, s.conv_width - 1, xbc_raw.shape[-1]),
+                          xbc_raw.dtype) if state is None
+                else state["conv"].astype(xbc_raw.dtype))
+        # conv history = last W-1 *raw* conv inputs
+        new_state = {
+            "conv": jnp.concatenate([hist, xbc_raw], axis=1)
+            [:, -(s.conv_width - 1):, :].astype(jnp.float32),
+            "ssm": final.reshape(bsz, n_heads, p, s.state_dim),
+        }
+    return out, new_state
+
+
+def mamba_decode_step(params: dict, x: jnp.ndarray, d_model: int,
+                      s: SSMConfig, state: dict,
+                      ctx: L.PhotonicCtx = L.EXACT_CTX,
+                      name: str = "mamba") -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode.  x: (B, 1, D); state from init_state/prefill."""
+    bsz = x.shape[0]
+    z, xbc, dt, d_inner, n_heads = _split(params, x, d_model, s, ctx, name)
+    width = s.conv_width
+    # rolling conv state
+    hist = state["conv"].astype(xbc.dtype)                 # (B, W-1, C)
+    window = jnp.concatenate([hist, xbc], axis=1)          # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + \
+        params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)                          # (B, C)
+    new_conv = window[:, 1:, :].astype(jnp.float32)
+
+    xs, b, c = jnp.split(
+        xbc_t, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1)
+    p, g = s.head_dim, s.n_groups
+    hpg = n_heads // g
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                           params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(bsz * n_heads, p).astype(jnp.float32)
+    bh = jnp.repeat(b.reshape(bsz, g, s.state_dim), hpg, axis=1) \
+        .reshape(bsz * n_heads, s.state_dim).astype(jnp.float32)
+    ch = jnp.repeat(c.reshape(bsz, g, s.state_dim), hpg, axis=1) \
+        .reshape(bsz * n_heads, s.state_dim).astype(jnp.float32)
+    st = state["ssm"].reshape(bsz * n_heads, p, s.state_dim)
+    y, new_st = kops.ssd_decode_step(st, xh, dt_t.reshape(-1),
+                                     jnp.tile(a, bsz), bh, ch)
+    y = y + xh * jnp.tile(params["d_skip"].astype(jnp.float32), bsz)[:, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(params["out_proj"], y, ctx, f"{name}.out_proj")
+    return out, {"conv": new_conv,
+                 "ssm": new_st.reshape(bsz, n_heads, p, s.state_dim)}

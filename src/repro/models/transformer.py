@@ -1,0 +1,418 @@
+"""Decoder-only LM assembly: dense / MoE / local-global / SSM / hybrid.
+
+A config resolves to a *layer plan*: a short list of groups, each either a
+single irregular layer or a stack of ``repeats`` identical superblocks that
+run under ``jax.lax.scan`` (bounds HLO size and — with jax.checkpoint —
+activation memory for the 48-81-layer archs).
+
+Covered families:
+  dense (qwen2, h2o-danube3, llava/mistral backbone), local:global (gemma3),
+  moe+MLA (deepseek v2/v3), ssm (mamba2), hybrid (zamba2: mamba blocks with
+  a SHARED attention block applied every k-th position — shared parameters,
+  per-position KV cache).
+
+Serving: ``init_caches`` -> ``prefill`` -> ``decode_step`` with explicit
+cache pytrees throughout (shardable by launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# Layer plans
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Group:
+    name: str
+    kind: str        # 'attn_dense' | 'attn_moe' | 'mamba' | 'mamba_shared'
+    repeats: int     # scan length (1 = single unscanned layer)
+    period: Tuple[str, ...] = ()   # sub-layer kinds within one superblock
+    windows: Tuple[int, ...] = ()  # per-sub-layer attention window (0=full)
+
+
+def layer_plan(cfg: ArchConfig) -> List[Group]:
+    if cfg.family == "ssm":
+        return [Group("mamba", "mamba", cfg.num_layers)]
+    if cfg.family == "hybrid":
+        p = cfg.shared_attn_period
+        full, rem = divmod(cfg.num_layers, p)
+        groups = [Group("hybrid", "mamba_shared", full)]
+        if rem:
+            groups.append(Group("tail", "mamba", rem))
+        return groups
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+        wins = tuple(cfg.local_window if i < p - 1 else 0 for i in range(p))
+        kinds = tuple("attn_dense" for _ in range(p))
+        return [Group("localglobal", "attn_dense", cfg.num_layers // p,
+                      period=kinds, windows=wins)]
+    if cfg.moe is not None:
+        groups = []
+        fd = cfg.moe.first_dense_layers
+        if fd:
+            groups.append(Group("dense_head", "attn_dense", fd))
+        groups.append(Group("moe_body", "attn_moe", cfg.num_layers - fd))
+        return groups
+    return [Group("body", "attn_dense", cfg.num_layers)]
+
+
+def attn_spec(cfg: ArchConfig, window: int = -1) -> A.AttnSpec:
+    return A.AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        window=(cfg.sliding_window if window < 0 else window),
+        mla=cfg.mla, head_pad=cfg.head_pad)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+def _make_sublayer(maker: L.ParamMaker, name: str, cfg: ArchConfig,
+                   kind: str, window: int) -> dict:
+    if kind == "mamba":
+        return {"mamba": S.make_mamba(maker, f"{name}.mamba", cfg.d_model,
+                                      cfg.ssm),
+                "ln": L.make_rms_norm(maker, f"{name}.ln", cfg.d_model)}
+    p = {
+        "ln1": L.make_rms_norm(maker, f"{name}.ln1", cfg.d_model),
+        "attn": A.make_attention(maker, f"{name}.attn",
+                                 attn_spec(cfg, window)),
+        "ln2": L.make_rms_norm(maker, f"{name}.ln2", cfg.d_model),
+    }
+    if kind == "attn_moe":
+        p["ffn"] = M.make_moe(maker, f"{name}.ffn", cfg.d_model, cfg.moe)
+    else:
+        p["ffn"] = L.make_mlp(maker, f"{name}.ffn", cfg.d_model, cfg.d_ff)
+    return p
+
+
+def make_stacked(maker: L.ParamMaker, name: str, n: int, build_fn):
+    """Stack n structurally-identical param trees on a leading STACK axis."""
+    if maker.spec_mode:
+        inner = build_fn(maker, f"{name}.0")
+        return jax.tree.map(lambda axes: (L.STACK,) + tuple(axes),
+                            inner, is_leaf=lambda x: isinstance(x, tuple))
+    parts = [build_fn(maker, f"{name}.{i}") for i in range(n)]
+    if maker.abstract:
+        return jax.tree.map(
+            lambda s, *_: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+            parts[0], *parts[1:])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+
+
+def _make_group(maker: L.ParamMaker, cfg: ArchConfig, g: Group) -> dict:
+    if g.kind == "mamba_shared":
+        def build(mk, nm):
+            blocks = {}
+            for i in range(cfg.shared_attn_period):
+                blocks[f"m{i}"] = _make_sublayer(mk, f"{nm}.m{i}", cfg,
+                                                 "mamba", 0)
+            return blocks
+        p = {"stack": make_stacked(maker, g.name, g.repeats, build)}
+        # ONE shared attention block (params reused at every period).
+        p["shared_attn"] = {
+            "ln1": L.make_rms_norm(maker, f"{g.name}.sh.ln1", cfg.d_model),
+            "attn": A.make_attention(maker, f"{g.name}.sh.attn",
+                                     attn_spec(cfg)),
+            "ln2": L.make_rms_norm(maker, f"{g.name}.sh.ln2", cfg.d_model),
+            "ffn": L.make_mlp(maker, f"{g.name}.sh.ffn", cfg.d_model,
+                              cfg.d_ff),
+        }
+        return p
+    if g.period:   # local:global superblock
+        def build(mk, nm):
+            return {f"l{i}": _make_sublayer(mk, f"{nm}.l{i}", cfg,
+                                            g.period[i], g.windows[i])
+                    for i in range(len(g.period))}
+        return {"stack": make_stacked(maker, g.name, g.repeats, build)}
+
+    def build(mk, nm):
+        return _make_sublayer(mk, nm, cfg, g.kind, -1)
+    return {"stack": make_stacked(maker, g.name, g.repeats, build)}
+
+
+def init_params(cfg: ArchConfig, key: Optional[jax.Array],
+                abstract: bool = False) -> dict:
+    """key=None -> logical-axis spec tree (same structure as the params)."""
+    maker = L.ParamMaker(key, dtype=jnp.dtype(cfg.dtype), abstract=abstract)
+    p: Dict[str, Any] = {
+        "embed": L.make_embedding(maker, "embed", cfg.vocab_size,
+                                  cfg.d_model),
+        "final_ln": L.make_rms_norm(maker, "final_ln", cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"table": maker.param(
+            "lm_head.table", (cfg.vocab_size, cfg.d_model),
+            (L.VOCAB, L.EMBED), scale=cfg.d_model ** -0.5)}
+    if cfg.vision_embed_dim:
+        p["projector"] = L.make_dense(maker, "projector",
+                                      cfg.vision_embed_dim, cfg.d_model,
+                                      (None, L.EMBED))
+    if cfg.mtp_depth > 0:
+        # DeepSeek-V3 multi-token prediction: a combiner + one extra block
+        # per depth, sharing the embedding/head (arXiv:2412.19437 §2.2).
+        p["mtp"] = {
+            "ln_h": L.make_rms_norm(maker, "mtp.ln_h", cfg.d_model),
+            "ln_e": L.make_rms_norm(maker, "mtp.ln_e", cfg.d_model),
+            "proj": L.make_dense(maker, "mtp.proj", 2 * cfg.d_model,
+                                 cfg.d_model, (None, L.EMBED)),
+            "block": _make_sublayer(maker, "mtp.block", cfg, "attn_dense",
+                                    -1),
+            "final_ln": L.make_rms_norm(maker, "mtp.final_ln", cfg.d_model),
+        }
+    for g in layer_plan(cfg):
+        p[g.name] = _make_group(maker, cfg, g)
+    return p
+
+
+def mtp_hidden(params: dict, hidden: jnp.ndarray, tokens: jnp.ndarray,
+               cfg: ArchConfig, ctx: L.PhotonicCtx = L.EXACT_CTX,
+               dist: M.DistCtx = M.LOCAL) -> jnp.ndarray:
+    """Depth-1 MTP trunk: hidden states for predicting token t+2.
+
+    hidden: (B, S, D) main-trunk final hidden; tokens: (B, S).  Returns
+    (B, S-1, D) — position t predicts tokens[t+2] (caller aligns targets).
+    """
+    mp = params["mtp"]
+    b, s = tokens.shape
+    h = L.rms_norm(mp["ln_h"], hidden[:, :-1])
+    e = L.rms_norm(mp["ln_e"], L.embed(params["embed"], tokens[:, 1:]))
+    x = L.dense(mp["proj"], jnp.concatenate([h, e], axis=-1), ctx,
+                "mtp.proj")
+    positions = jnp.broadcast_to(jnp.arange(s - 1, dtype=jnp.int32)[None],
+                                 (b, s - 1))
+    x, _ = _run_sublayer(mp["block"], x, positions, cfg, "attn_dense", 0,
+                         ctx, dist, "mtp.block")
+    return L.rms_norm(mp["final_ln"], x)
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    return init_params(cfg, key=None)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _run_sublayer(p, x, positions, cfg, kind, window, ctx, dist, name,
+                  cache=None, cache_index=None, ssm_impl="jax",
+                  return_state=False):
+    if kind == "mamba":
+        h = L.rms_norm(p["ln"], x)
+        if cache_index is not None:
+            out, st = S.mamba_decode_step(p["mamba"], h, cfg.d_model, cfg.ssm,
+                                          cache, ctx, name)
+        else:
+            out, st = S.mamba_block(p["mamba"], h, cfg.d_model, cfg.ssm, ctx,
+                                    name, state=cache,
+                                    return_state=return_state, impl=ssm_impl)
+        return x + out, st
+    spec = attn_spec(cfg, window)
+    h, new_cache = A.attention(p["attn"], L.rms_norm(p["ln1"], x), positions,
+                               spec, ctx, f"{name}.attn", cache, cache_index,
+                               dist=dist)
+    x = x + h
+    h2 = L.rms_norm(p["ln2"], x)
+    if kind == "attn_moe":
+        ff = M.moe_ffn(p["ffn"], h2, cfg.moe, ctx, f"{name}.ffn", dist)
+    else:
+        ff = L.mlp(p["ffn"], h2, ctx, f"{name}.ffn")
+    return x + ff, new_cache
+
+
+def _scan_group(p, x, positions, cfg, g: Group, ctx, dist, remat: bool,
+                caches=None, cache_index=None, ssm_impl="jax",
+                return_state=False):
+    """Run one plan group; returns (x, new_caches_or_None)."""
+    has_cache = caches is not None
+
+    def superblock(x, layer_p, layer_cache, idx):
+        new_caches = {}
+        if g.kind == "mamba_shared":
+            for i in range(cfg.shared_attn_period):
+                key = f"m{i}"
+                c = layer_cache.get(key) if has_cache else None
+                x, nc = _run_sublayer(
+                    layer_p[key], x, positions, cfg, "mamba", 0, ctx, dist,
+                    f"{g.name}.m{i}", c, cache_index, ssm_impl, return_state)
+                new_caches[key] = nc
+            c = layer_cache.get("sh") if has_cache else None
+            x, nc = _run_sublayer(
+                p["shared_attn"], x, positions, cfg, "attn_dense", 0, ctx,
+                dist, f"{g.name}.sh", c, cache_index, ssm_impl, return_state)
+            new_caches["sh"] = nc
+        elif g.period:
+            for i, (kind, win) in enumerate(zip(g.period, g.windows)):
+                key = f"l{i}"
+                c = layer_cache.get(key) if has_cache else None
+                x, nc = _run_sublayer(
+                    layer_p[key], x, positions, cfg, kind, win, ctx, dist,
+                    f"{g.name}.{i}", c, cache_index, ssm_impl, return_state)
+                new_caches[key] = nc
+        else:
+            c = layer_cache if has_cache else None
+            x, nc = _run_sublayer(
+                layer_p, x, positions, cfg, g.kind, -1, ctx, dist, g.name,
+                c, cache_index, ssm_impl, return_state)
+            new_caches = nc
+        del idx
+        return x, new_caches
+
+    # §Perf iteration 5: save matmul outputs across the remat boundary
+    # (recomputing elementwise ops is ~free; recomputing dots is ~25% of
+    # the step's FLOPs).
+    fn = jax.checkpoint(
+        superblock,
+        policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable) \
+        if remat else superblock
+    stacked = p["stack"]
+    if g.repeats <= 4:
+        # Unrolled: avoids lax.scan for short groups.  Also what the
+        # roofline probes rely on — XLA cost_analysis counts a scan body
+        # ONCE regardless of trip count, so probe configs (1-2 repeats)
+        # must be unrolled to measure true per-layer costs.
+        new_cache_list = []
+        for i in range(g.repeats):
+            single = jax.tree.map(lambda a, i=i: a[i], stacked)
+            sc = jax.tree.map(lambda a, i=i: a[i], caches) if has_cache \
+                else {}
+            x, nc = fn(x, single, sc, i)
+            new_cache_list.append(nc)
+        if new_cache_list[-1] is None or not (has_cache or return_state):
+            return x, None
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *new_cache_list)
+
+    if not has_cache:
+        def body_nocache(carry, xs):
+            layer_p, idx = xs
+            x2, nc = fn(carry, layer_p, {}, idx)
+            return x2, (nc if return_state else None)
+        x, ncs = jax.lax.scan(body_nocache, x,
+                              (stacked, jnp.arange(g.repeats)))
+        return x, (ncs if return_state else None)
+
+    def body(carry, xs):
+        layer_p, layer_c, idx = xs
+        x2, nc = fn(carry, layer_p, layer_c, idx)
+        return x2, nc
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches,
+                                           jnp.arange(g.repeats)))
+    return x, new_caches
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+            ctx: L.PhotonicCtx = L.EXACT_CTX, dist: M.DistCtx = M.LOCAL,
+            remat: bool = True, ssm_impl: str = "jax",
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            return_hidden: bool = False) -> jnp.ndarray:
+    """Training/scoring forward: tokens (B, S) -> logits (B, S, vocab).
+
+    ``prefix_embeds`` (B, S_img, vision_dim): VLM patch embeddings that are
+    projected and OVERWRITE the embeddings of the first S_img positions
+    (the assignment's modality-stub contract: frontends provide precomputed
+    embeddings; sequence length already includes them).
+
+    ``return_hidden=True`` returns the final-norm hidden states instead of
+    logits — the vocab-sharded cross-entropy path consumes these so the
+    full logits tensor is never materialized replicated.
+    """
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        proj = L.dense(params["projector"], prefix_embeds, ctx, "projector")
+        n_img = proj.shape[1]
+        x = jnp.concatenate([proj.astype(x.dtype), x[:, n_img:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for g in layer_plan(cfg):
+        x, _ = _scan_group(params[g.name], x, positions, cfg, g, ctx, dist,
+                           remat, ssm_impl=ssm_impl)
+    x = L.rms_norm(params["final_ln"], x)
+    if return_hidden:
+        return x
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    caches = {}
+    for g in layer_plan(cfg):
+        def one(kind: str, window: int):
+            if kind == "mamba":
+                return S.init_state(cfg.d_model, cfg.ssm, batch)
+            return A.init_cache(attn_spec(cfg, window), batch, max_len, dtype)
+
+        if g.kind == "mamba_shared":
+            block = {f"m{i}": one("mamba", 0)
+                     for i in range(cfg.shared_attn_period)}
+            block["sh"] = one("attn_dense", 0)
+        elif g.period:
+            block = {f"l{i}": one(g.period[i], g.windows[i])
+                     for i in range(len(g.period))}
+        else:
+            block = one(g.kind, cfg.sliding_window if g.kind != "mamba"
+                        else 0)
+        caches[g.name] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (g.repeats,) + a.shape)
+            if g.repeats >= 1 else a, block)
+    return caches
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+            caches: dict, ctx: L.PhotonicCtx = L.EXACT_CTX,
+            dist: M.DistCtx = M.LOCAL, ssm_impl: str = "jax",
+            prefix_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Fill caches from a prompt; returns (last-token logits, caches)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        proj = L.dense(params["projector"], prefix_embeds, ctx, "projector")
+        x = jnp.concatenate([proj.astype(x.dtype), x[:, proj.shape[1]:]], 1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    new_caches = {}
+    for g in layer_plan(cfg):
+        x, nc = _scan_group(params[g.name], x, positions, cfg, g, ctx, dist,
+                            remat=False, caches=caches[g.name],
+                            cache_index=None, ssm_impl=ssm_impl,
+                            return_state=True)
+        new_caches[g.name] = nc
+    x = L.rms_norm(params["final_ln"], x[:, -1:])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x, ctx), new_caches
+
+
+def decode_step(params: dict, token: jnp.ndarray, index: jnp.ndarray,
+                cfg: ArchConfig, caches: dict,
+                ctx: L.PhotonicCtx = L.EXACT_CTX,
+                dist: M.DistCtx = M.LOCAL) -> Tuple[jnp.ndarray, dict]:
+    """One decode step.  token: (B, 1) int32; index: scalar position."""
+    b = token.shape[0]
+    x = L.embed(params["embed"], token)
+    positions = jnp.full((b, 1), index, jnp.int32)
+    new_caches = {}
+    for g in layer_plan(cfg):
+        x, nc = _scan_group(params[g.name], x, positions, cfg, g, ctx, dist,
+                            remat=False, caches=caches[g.name],
+                            cache_index=index)
+        new_caches[g.name] = nc
+    x = L.rms_norm(params["final_ln"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x, ctx), new_caches

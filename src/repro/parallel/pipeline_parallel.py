@@ -1,0 +1,69 @@
+"""Pipeline parallelism (optional extra, off the 40-cell baseline path).
+
+GPipe-style microbatch pipelining over a mesh axis using shard_map +
+collective_permute (ppermute): stage s holds layer slice s and forwards its
+activation to stage s+1 every tick.  M microbatches finish in M + S - 1
+ticks; bubble fraction = (S-1)/(S+M-1).
+
+The whole schedule is a single jitted lax.scan — no host control flow, the
+TPU-idiomatic form of a pipeline schedule.  Forward pass (microbatched
+inference/eval); a training variant wraps this in jax.grad unchanged.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)
+
+
+def pipeline_forward(block_fn: Callable, stage_params, x: jnp.ndarray,
+                     mesh: Mesh, axis: str = "stage") -> jnp.ndarray:
+    """Run x through S pipeline stages with microbatching.
+
+    block_fn(stage_param_slice, mb) -> mb : one stage's computation.
+    stage_params: leaves with leading dim S, sharded P(axis, ...).
+    x: (M, mb, features...) microbatches (replicated; stage 0 injects
+    them in order).  Returns (M, mb, features...) outputs.
+    """
+    n_stages = mesh.shape[axis]
+    m_total = x.shape[0]
+    ticks = m_total + n_stages - 1
+
+    def body(params, xs):
+        stage = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params)
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(state, t):
+            carry, outputs = state
+            inject = jnp.where(
+                stage == 0,
+                jax.lax.dynamic_index_in_dim(
+                    xs, jnp.clip(t, 0, m_total - 1), 0, keepdims=False),
+                carry)
+            y = block_fn(p, inject)
+            done = t - (n_stages - 1)
+            outputs = jax.lax.cond(
+                (stage == n_stages - 1) & (done >= 0),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(done, 0, m_total - 1), 0),
+                lambda o: o, outputs)
+            carry = jax.lax.ppermute(y, axis, perm)
+            return (carry, outputs), None
+
+        init = (jnp.zeros(xs.shape[1:], xs.dtype), jnp.zeros_like(xs))
+        (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(ticks))
+        # only the last stage holds results; psum broadcasts them
+        return jax.lax.psum(outputs, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params,
+                         is_leaf=lambda a: hasattr(a, "ndim"))
+    return shard_map(body, mesh=mesh, in_specs=(pspec, P()), out_specs=P(),
+                     check_rep=False)(stage_params, x)

@@ -1,0 +1,232 @@
+"""Logical-axis sharding: map model-zoo param specs to mesh PartitionSpecs.
+
+Every parameter in the zoo carries a tuple of *logical* axis names
+(models/layers.py).  ``RULES`` maps logical -> mesh axes; a mesh axis is
+used at most once per param (first logical occurrence wins — e.g. MoE
+expert tensors (EXPERT, EMBED, MLP) shard EXPERT over 'model' and leave MLP
+replicated, which is exactly what the shard_map EP path expects).
+
+Batch/activation sharding: batch over the data axes ('pod' + 'data' on the
+multi-pod mesh).  Decode caches with global_batch < |data| switch to
+sequence sharding (SP) so the long_500k cells spread their KV cache instead
+of replicating it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (tuples = shard over several axes;
+# trailing members are dropped if the dim doesn't divide their product)
+RULES: Dict[Optional[str], object] = {
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    # FSDP for MoE giants: 256 experts shard over model*data = 256 chips
+    # persistently (deepseek-v3 bf16 experts: 84 GB -> 5 GB per device);
+    # the shard_map EP entry (in_spec P('model')) re-gathers one layer's
+    # local experts over 'data' at use — exactly the FSDP gather, inserted
+    # by XLA automatically.
+    "expert": ("model", "data"),
+    "ssm_inner": "model",
+    "stack": None,
+    None: None,
+}
+
+
+# Full FSDP for the MoE giants (deepseek v2/v3): every large weight class
+# shards over model*data = 256 chips persistently; XLA inserts the
+# per-layer all-gather at use.  Other archs keep pure TP (they already fit,
+# and FSDP costs collectives).
+FSDP_RULES: Dict[Optional[str], object] = {
+    **RULES,
+    "mlp": ("model", "data"),
+    "heads": ("model", "data"),
+    "kv_heads": ("model", "data"),
+    "vocab": ("model", "data"),
+}
+
+
+def spec_to_pspec(axes: Tuple, rules: Optional[dict] = None) -> P:
+    rules = rules or RULES
+    used = set()
+    out = []
+    for a in axes:
+        mesh_axis = rules.get(a)
+        if isinstance(mesh_axis, tuple):
+            fresh = tuple(m for m in mesh_axis if m not in used)
+            used.update(fresh)
+            out.append(fresh if fresh else None)
+            continue
+        if mesh_axis in used:
+            mesh_axis = None
+        if mesh_axis is not None:
+            used.add(mesh_axis)
+        out.append(mesh_axis)
+    return P(*out)
+
+
+def _divisible(shape: Tuple[int, ...], pspec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh doesn't divide evenly.  XLA tolerates
+    uneven sharding, but padded shards waste memory and make cost analysis
+    lie — replicating the stragglers is cheaper for the odd vocab sizes
+    (whisper 51865, mamba2 50280)."""
+    fixed = []
+    for dim, ax in zip(shape, tuple(pspec) + (None,) * (len(shape) -
+                                                        len(tuple(pspec)))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        if isinstance(ax, tuple):
+            # keep the longest prefix whose product divides the dim
+            kept = []
+            prod = 1
+            for m in ax:
+                if dim % (prod * mesh.shape[m]) == 0:
+                    kept.append(m)
+                    prod *= mesh.shape[m]
+                else:
+                    break
+            fixed.append(tuple(kept) if kept else None)
+            continue
+        size = mesh.shape[ax] if isinstance(ax, str) else 1
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(spec_tree, mesh: Mesh, shape_tree=None,
+                    rules: Optional[dict] = None):
+    """Spec tree (tuples of logical axes) -> tree of NamedSharding.
+
+    ``shape_tree`` (abstract params) enables the divisibility fixup.
+    """
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, spec_to_pspec(axes, rules)),
+            spec_tree, is_leaf=is_leaf)
+    return jax.tree.map(
+        lambda axes, sds: NamedSharding(
+            mesh, _divisible(sds.shape, spec_to_pspec(axes, rules), mesh)),
+        spec_tree, shape_tree, is_leaf=is_leaf)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """Token batches: (B, S, ...) with B over the data axes."""
+    return NamedSharding(mesh, P(data_axes(mesh), *([None] * (ndim - 1))))
+
+
+def batch_pspec(mesh: Mesh, example) -> NamedSharding:
+    return NamedSharding(mesh, P(data_axes(mesh),
+                                 *([None] * (example.ndim - 1))))
+
+
+def cache_shardings(cache_tree, mesh: Mesh, global_batch: int):
+    """Decode-state sharding.
+
+    Leaves are (B, S, heads, hd) / (B, S, R) / (B, heads, P, S) / (B, S)
+    shaped.  Rule: shard B over data when divisible; otherwise (long_500k,
+    B=1) shard the *sequence/slots* dim over data (SP).  Head-like dims go
+    over 'model' when divisible.
+    """
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+
+    def leaf(sds):
+        shape = sds.shape
+        spec = [None] * len(shape)
+        batched = shape[0] % dsize == 0
+        if batched:
+            spec[0] = daxes
+        elif len(shape) >= 2 and shape[1] >= 1024 and \
+                shape[1] % (dsize * msize) == 0:
+            spec[1] = daxes + ("model",)         # B=1: slots over ALL axes
+        elif len(shape) >= 2 and shape[1] % dsize == 0:
+            spec[1] = daxes                      # sequence-sharded cache (SP)
+        if len(shape) == 4:
+            if shape[1] >= 1024:                 # (B, slots, KVH, HD)
+                # §Perf iteration 3: sequence-shard the decode cache
+                # (flash-decode): batch-divisible cells put slots over
+                # 'model'; B=1 long-context cells put slots over ALL axes
+                # (matches attention.decode_axes).  Falls back to head/dim
+                # sharding if slots don't divide.
+                if batched and shape[1] % msize == 0:
+                    spec[1] = "model"
+                elif not batched and shape[1] % (dsize * msize) == 0:
+                    spec[1] = daxes + ("model",)
+                elif shape[2] % msize == 0 and shape[2] >= msize:
+                    spec[2] = "model"
+                elif shape[3] % msize == 0:
+                    spec[3] = "model"
+            else:                                # (B, H, P, S) ssm state
+                if spec[1] is None and shape[1] % msize == 0:
+                    spec[1] = "model"
+        elif len(shape) == 3:
+            if shape[1] >= 1024 and shape[1] % msize == 0 and \
+                    spec[1] is None:
+                spec[1] = "model"                # MLA compressed cache slots
+            elif shape[2] % msize == 0 and shape[2] >= 512:
+                spec[2] = "model"                # conv state channels
+        elif len(shape) == 2 and shape[1] >= 1024 and \
+                shape[1] % msize == 0 and spec[1] is None:
+            spec[1] = "model"                    # cache 'pos' metadata
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache_tree)
+
+
+def zero1_shardings(spec_tree, mesh: Mesh, shape_tree,
+                    rules: Optional[dict] = None):
+    """ZeRO-1 optimizer-moment sharding: params' PartitionSpec plus the
+    data axes on the largest still-unsharded divisible dim.
+
+    Moments are 8/10 of training-state bytes; sharding them over 'data'
+    (x16 here) is what lets deepseek-v3-671b's optimizer state fit a 16 GB
+    v5e chip (EXPERIMENTS.md §Dry-run).  The update gathers nothing: AdamW
+    is elementwise, so each shard updates its moment slice against its
+    (grad, param) slice — XLA inserts the reduce-scatter automatically.
+    """
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+
+    def leaf(axes, sds):
+        base = tuple(_divisible(sds.shape, spec_to_pspec(axes, rules), mesh))
+        base = base + (None,) * (len(sds.shape) - len(base))
+        used = set()
+        for ax in base:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        # shard over whatever data axes the param spec left unused (on the
+        # multi-pod mesh FSDP'd experts still have 'pod' available)
+        avail = tuple(a for a in daxes if a not in used)
+        if not avail:
+            return NamedSharding(mesh, P(*base))
+        asize = 1
+        for a in avail:
+            asize *= mesh.shape[a]
+        best, best_dim = None, 0
+        for i, (dim, ax) in enumerate(zip(sds.shape, base)):
+            if ax is None and dim % asize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None:
+            base = base[:best] + (avail,) + base[best + 1:]
+        return NamedSharding(mesh, P(*base))
+
+    return jax.tree.map(leaf, spec_tree, shape_tree, is_leaf=is_leaf)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

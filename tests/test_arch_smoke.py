@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, cell_is_supported
+from repro.models import model_zoo as zoo
+from repro.models.layers import PhotonicCtx
+from repro.core.types import Backend, PhotonicConfig
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.encoder_seq, zoo.WHISPER_FRAME_FEAT),
+            jnp.float32).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (b, cfg.num_image_tokens, cfg.vision_embed_dim),
+            jnp.float32).astype(jnp.dtype(cfg.dtype))
+    return batch
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    expected = {"qwen2-0.5b", "qwen2-1.5b", "h2o-danube-3-4b", "gemma3-12b",
+                "deepseek-v2-236b", "deepseek-v3-671b", "mamba2-130m",
+                "whisper-tiny", "llava-next-mistral-7b", "zamba2-7b"}
+    assert set(ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_numbers(arch):
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "deepseek-v2-236b":
+        assert (cfg.moe.num_experts, cfg.moe.experts_per_token,
+                cfg.moe.num_shared_experts, cfg.moe.d_ff_expert,
+                cfg.mla.kv_lora_rank) == (160, 6, 2, 1536, 512)
+    if arch == "deepseek-v3-671b":
+        assert (cfg.moe.num_experts, cfg.moe.experts_per_token,
+                cfg.moe.num_shared_experts, cfg.moe.d_ff_expert) == \
+            (256, 8, 1, 2048)
+    if arch == "mamba2-130m":
+        assert cfg.ssm.state_dim == 128
+    if arch == "zamba2-7b":
+        assert cfg.ssm.state_dim == 64
+    if arch == "gemma3-12b":
+        assert cfg.local_global_period == 6  # 5 local : 1 global
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one SGD train step on the reduced config."""
+    cfg = get_config(arch, smoke=True)
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    loss, grads = jax.value_and_grad(zoo.loss_fn)(params, batch, cfg)
+    assert jnp.isfinite(loss), arch
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat), arch
+    # one SGD step changes the loss
+    new_params = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype),
+                              params, grads)
+    loss2 = zoo.loss_fn(new_params, batch, cfg)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_roundtrip(arch):
+    """prefill -> decode_step matches the teacher-forced forward."""
+    cfg = get_config(arch, smoke=True)
+    cfg = type(cfg)(**{**cfg.__dict__, "dtype": "float32"})
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    caches = zoo.init_caches(cfg, b, s + 8, jnp.float32)
+    logits, state = zoo.prefill_fn(params, batch, cfg, caches)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, state = zoo.decode_fn(params, tok, jnp.int32(s), cfg, state)
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_photonic_numerics_backend(arch):
+    """The paper's technique runs as the numerics backend of every arch."""
+    cfg = get_config(arch, smoke=True)
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    pctx = PhotonicCtx(cfg=PhotonicConfig(backend=Backend.HEANA, bits=8,
+                                          adc_bits=12, dpe_size=64,
+                                          noise_enabled=False), impl="ref")
+    loss_exact = zoo.loss_fn(params, batch, cfg)
+    loss_phot = zoo.loss_fn(params, batch, cfg, ctx=pctx)
+    assert jnp.isfinite(loss_phot), arch
+    # 8-bit noiseless photonic numerics stay close to exact
+    assert abs(float(loss_phot) - float(loss_exact)) < \
+        0.75 * abs(float(loss_exact)) + 0.5, arch
+
+
+def test_deepseek_v3_mtp_head():
+    """DeepSeek-V3's multi-token-prediction auxiliary head trains."""
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    assert cfg.mtp_depth == 1
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    assert "mtp" in params
+    batch = _batch(cfg)
+    base = zoo.loss_fn(params, batch, cfg)
+    with_mtp, grads = jax.value_and_grad(
+        lambda p: zoo.loss_fn(p, batch, cfg, mtp_weight=0.3))(params)
+    assert float(with_mtp) > float(base)          # aux loss added
+    assert any(float(jnp.max(jnp.abs(g))) > 0
+               for g in jax.tree.leaves(grads["mtp"]))
+
+
+def test_long_500k_support_flags():
+    runs = {a: cell_is_supported(get_config(a), SHAPES["long_500k"])[0]
+            for a in ARCHS}
+    assert runs == {
+        "qwen2-0.5b": False, "qwen2-1.5b": False, "h2o-danube-3-4b": True,
+        "gemma3-12b": True, "deepseek-v2-236b": False,
+        "deepseek-v3-671b": False, "mamba2-130m": True,
+        "whisper-tiny": False, "llava-next-mistral-7b": False,
+        "zamba2-7b": True,
+    }

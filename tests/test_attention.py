@@ -1,0 +1,196 @@
+"""Attention-layer unit tests: masks, windows, MLA, rolling caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+def _spec(**kw):
+    base = dict(d_model=48, num_heads=4, num_kv_heads=2, head_dim=12)
+    base.update(kw)
+    return A.AttnSpec(**base)
+
+
+def _params(spec, seed=0):
+    return A.make_attention(L.ParamMaker(jax.random.PRNGKey(seed),
+                                         dtype=F32), "attn", spec)
+
+
+def _x(b, s, d=48, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, s, d), F32)
+
+
+def _pos(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+class TestMasks:
+    def test_causal(self):
+        qp = _pos(1, 4)
+        bias = A._mask_bias(qp, qp, window=0, causal=True)[0]
+        visible = (np.asarray(bias) == 0.0)
+        want = np.tril(np.ones((4, 4), bool))
+        np.testing.assert_array_equal(visible, want)
+
+    def test_sliding_window(self):
+        qp = _pos(1, 6)
+        bias = A._mask_bias(qp, qp, window=3, causal=True)[0]
+        visible = (np.asarray(bias) == 0.0)
+        for i in range(6):
+            for j in range(6):
+                assert visible[i, j] == (j <= i and i - j < 3), (i, j)
+
+    def test_empty_slots_masked(self):
+        qp = jnp.array([[5]], jnp.int32)
+        kpos = jnp.array([[3, -1, 5, 7]], jnp.int32)   # -1 empty, 7 future
+        bias = A._mask_bias(qp, kpos, window=0, causal=True)[0, 0]
+        np.testing.assert_array_equal(np.asarray(bias) == 0.0,
+                                      [True, False, True, False])
+
+
+class TestCausality:
+    def test_future_tokens_do_not_affect_past(self):
+        spec = _spec()
+        p = _params(spec)
+        x1 = _x(1, 8)
+        x2 = x1.at[:, 6:].set(123.0)
+        o1, _ = A.attention(p, x1, _pos(1, 8), spec)
+        o2, _ = A.attention(p, x2, _pos(1, 8), spec)
+        np.testing.assert_allclose(np.asarray(o1[:, :6]),
+                                   np.asarray(o2[:, :6]), atol=1e-5)
+
+    def test_window_limits_context(self):
+        spec = _spec(window=2)
+        p = _params(spec)
+        x1 = _x(1, 8)
+        x2 = x1.at[:, 0].set(55.0)      # outside the window of position 7
+        o1, _ = A.attention(p, x1, _pos(1, 8), spec)
+        o2, _ = A.attention(p, x2, _pos(1, 8), spec)
+        np.testing.assert_allclose(np.asarray(o1[:, 7]), np.asarray(o2[:, 7]),
+                                   atol=1e-5)
+        assert not np.allclose(np.asarray(o1[:, 1]), np.asarray(o2[:, 1]))
+
+
+class TestRollingCache:
+    def test_decode_equals_full_context_window(self):
+        """Rolling (window-slot) decode == full attention with window mask."""
+        spec = _spec(window=4)
+        p = _params(spec)
+        s_total = 10
+        x = _x(1, s_total)
+        full, _ = A.attention(p, x, _pos(1, s_total), spec)
+        cache = A.init_cache(spec, 1, max_len=s_total, dtype=F32)
+        assert cache["k"].shape[1] == 4            # window slots only
+        outs = []
+        for t in range(s_total):
+            o, cache = A.attention(p, x[:, t:t + 1],
+                                   jnp.full((1, 1), t, jnp.int32), spec,
+                                   cache=cache, cache_index=jnp.int32(t))
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(full), atol=1e-4)
+
+    def test_prefill_longer_than_window(self):
+        spec = _spec(window=4)
+        p = _params(spec)
+        x = _x(1, 10)
+        cache = A.init_cache(spec, 1, max_len=16, dtype=F32)
+        _, cache = A.attention(p, x, _pos(1, 10), spec, cache=cache)
+        # cache retains exactly the last `window` positions
+        kept = sorted(int(v) for v in np.asarray(cache["pos"][0]))
+        assert kept == [6, 7, 8, 9]
+        # continuing decode matches full-context windowed attention
+        x11 = _x(1, 11, seed=9)
+        x_all = x11.at[:, :10].set(x)
+        full, _ = A.attention(p, x_all, _pos(1, 11), spec)
+        o, _ = A.attention(p, x_all[:, 10:11], jnp.full((1, 1), 10,
+                                                        jnp.int32), spec,
+                           cache=cache, cache_index=jnp.int32(10))
+        np.testing.assert_allclose(np.asarray(o[:, 0]),
+                                   np.asarray(full[:, 10]), atol=1e-4)
+
+
+class TestMLA:
+    def _mla_spec(self, q_lora=0):
+        return _spec(num_heads=4, num_kv_heads=4,
+                     mla=MLAConfig(kv_lora_rank=16, q_lora_rank=q_lora,
+                                   qk_rope_dim=8, qk_nope_dim=12,
+                                   v_head_dim=12))
+
+    @pytest.mark.parametrize("q_lora", [0, 24])
+    def test_absorbed_decode_equals_naive(self, q_lora):
+        """The absorbed-weight decode path == the naive train path."""
+        spec = self._mla_spec(q_lora)
+        p = _params(spec)
+        s = 9
+        x = _x(1, s)
+        full, _ = A.attention(p, x, _pos(1, s), spec)
+        cache = A.init_cache(spec, 1, max_len=s, dtype=F32)
+        _, cache = A.attention(p, x[:, :s - 1], _pos(1, s - 1), spec,
+                               cache=cache)
+        o, _ = A.attention(p, x[:, s - 1:], jnp.full((1, 1), s - 1,
+                                                     jnp.int32), spec,
+                           cache=cache, cache_index=jnp.int32(s - 1))
+        np.testing.assert_allclose(np.asarray(o[:, 0]),
+                                   np.asarray(full[:, -1]), atol=1e-4)
+
+    def test_cache_is_compressed(self):
+        spec = self._mla_spec()
+        cache = A.init_cache(spec, 2, 32, F32)
+        assert set(cache) == {"ckv", "kr", "pos"}
+        assert cache["ckv"].shape == (2, 32, 16)     # rank, not heads*dim
+        assert cache["kr"].shape == (2, 32, 8)
+
+
+class TestCrossAttention:
+    def test_no_causal_mask_and_shapes(self):
+        spec = _spec(causal=False, use_rope=False)
+        p = _params(spec)
+        x = _x(2, 5)
+        kv = _x(2, 7, seed=3)
+        o, cache = A.attention(p, x, _pos(2, 5), spec, kv_source=kv)
+        assert o.shape == (2, 5, 48) and cache is None
+        # swapping kv rows changes all outputs (no causality over kv)
+        kv2 = kv[:, ::-1]
+        o2, _ = A.attention(p, x, _pos(2, 5), spec, kv_source=kv2)
+        assert not np.allclose(np.asarray(o), np.asarray(o2))
+
+
+class TestHeadPadding:
+    def test_padded_equals_unpadded_reference(self):
+        spec_r = _spec(num_heads=3, num_kv_heads=1)
+        spec_p = dataclasses.replace(spec_r, head_pad=4)
+        pr = _params(spec_r)
+        pp = _params(spec_p, seed=5)
+        hd = spec_r.head_dim
+        pp = {**pp,
+              "wq": {"w": jnp.zeros_like(pp["wq"]["w"]).at[:, :3 * hd].set(
+                  pr["wq"]["w"])},
+              "wk": pr["wk"], "wv": pr["wv"],
+              "wo": {"w": jnp.zeros_like(pp["wo"]["w"]).at[:3 * hd, :].set(
+                  pr["wo"]["w"])}}
+        x = _x(2, 6)
+        o_r, _ = A.attention(pr, x, _pos(2, 6), spec_r)
+        o_p, _ = A.attention(pp, x, _pos(2, 6), spec_p)
+        np.testing.assert_allclose(np.asarray(o_r), np.asarray(o_p),
+                                   atol=1e-5)
+
+    def test_padded_decode_matches_prefill(self):
+        spec = _spec(num_heads=3, num_kv_heads=1, head_pad=4)
+        p = _params(spec)
+        x = _x(1, 6)
+        full, _ = A.attention(p, x, _pos(1, 6), spec)
+        cache = A.init_cache(spec, 1, 8, F32)
+        _, cache = A.attention(p, x[:, :5], _pos(1, 5), spec, cache=cache)
+        o, _ = A.attention(p, x[:, 5:6], jnp.full((1, 1), 5, jnp.int32),
+                           spec, cache=cache, cache_index=jnp.int32(5))
+        np.testing.assert_allclose(np.asarray(o[:, 0]),
+                                   np.asarray(full[:, 5]), atol=1e-4)

@@ -1,0 +1,170 @@
+"""Dataflow accounting (Fig. 1) + system perf model (Figs. 11-14) tests."""
+import math
+
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import perf_model as pm
+from repro.core.types import BPCA_NUM_CAPACITORS, Dataflow
+from repro.models import cnn
+
+G = df.GemmShape(c=784, k=864, d=128)   # GoogleNet inception-3a 3x3
+
+
+class TestBufferAccessCounting:
+    def test_fig1_orderings(self):
+        """WS minimizes weight reads, IS input reads, OS psum traffic."""
+        t = df.fig1_table(G, dpe_size=83, with_bpca=False)
+        assert t["ws"]["weight_reads"] == min(x["weight_reads"]
+                                              for x in t.values())
+        assert t["is"]["input_reads"] == min(x["input_reads"]
+                                             for x in t.values())
+        assert t["os"]["psum_accesses"] == 0
+        assert t["is"]["psum_accesses"] > 0 and t["ws"]["psum_accesses"] > 0
+
+    def test_exact_counts(self):
+        acc = df.buffer_accesses(G, Dataflow.WS, 83, with_bpca=False)
+        assert acc.weight_reads == G.k * G.d
+        assert acc.input_reads == G.c * G.k * G.d
+        f = math.ceil(G.k / 83)
+        assert acc.psum_writes == G.c * G.d * f
+        assert df.buffer_accesses(G, Dataflow.IS, 83, False).input_reads == \
+            G.c * G.k
+
+    def test_bpca_eliminates_psum_traffic(self):
+        for flow in Dataflow:
+            acc = df.buffer_accesses(G, flow, 83, with_bpca=True)
+            assert acc.psum_writes == 0 and acc.psum_reads == 0
+
+    def test_googlenet_layer5_identity(self):
+        l5 = cnn.googlenet_layer5()
+        assert (l5.c, l5.k, l5.d) == (784, 864, 128)
+
+
+class TestSchedule:
+    def test_cycle_count_conservation(self):
+        """Total (output, fold) work is dataflow-invariant."""
+        f = math.ceil(G.k / 83)
+        work = G.c * G.d * f
+        for flow in Dataflow:
+            sch = df.schedule(G, flow, 83, 83, with_bpca=True, os_speedup=1)
+            assert sch.cycles == math.ceil(work / 83)
+
+    def test_os_speedup_reduces_cycles(self):
+        base = df.schedule(G, Dataflow.OS, 83, 83, True, os_speedup=1)
+        fast = df.schedule(G, Dataflow.OS, 83, 83, True, os_speedup=10)
+        assert fast.cycles == math.ceil(base.cycles / 10)
+        # speedup only applies to OS
+        ws1 = df.schedule(G, Dataflow.WS, 83, 83, True, os_speedup=10)
+        ws2 = df.schedule(G, Dataflow.WS, 83, 83, True, os_speedup=1)
+        assert ws1.cycles == ws2.cycles
+
+    def test_capacitor_spill(self):
+        big = df.GemmShape(c=BPCA_NUM_CAPACITORS * 3, k=256, d=64)
+        sch = df.schedule(big, Dataflow.WS, 83, 83, with_bpca=True)
+        assert sch.psum_events > 0          # in-flight outputs exceed p=4608
+        sch_os = df.schedule(big, Dataflow.OS, 83, 83, with_bpca=True)
+        assert sch_os.psum_events == 0      # OS never spills
+
+    def test_without_bpca_every_fold_roundtrips(self):
+        sch = df.schedule(G, Dataflow.WS, 83, 83, with_bpca=False)
+        f = math.ceil(G.k / 83)
+        assert sch.psum_events == G.outputs * (f - 1)
+        assert sch.adc_conversions == G.outputs * f
+
+
+class TestCnnTables:
+    @pytest.mark.parametrize("name,gmacs_lo,gmacs_hi", [
+        ("googlenet", 1.4, 1.8), ("resnet50", 3.5, 4.2),
+        ("mobilenet_v2", 0.25, 0.35), ("shufflenet_v2", 0.10, 0.20),
+    ])
+    def test_total_macs_match_literature(self, name, gmacs_lo, gmacs_hi):
+        layers = cnn.CNN_ZOO[name]()
+        gmacs = cnn.total_macs(layers) / 1e9
+        assert gmacs_lo < gmacs < gmacs_hi
+
+
+class TestPerfModel:
+    @pytest.mark.parametrize("dr", [1.0, 5.0, 10.0])
+    def test_heana_os_beats_all_baselines(self, dr):
+        layers = cnn.CNN_ZOO["googlenet"]()
+        h = pm.cnn_inference(
+            layers, pm.AcceleratorConfig.equal_area("heana", Dataflow.OS, dr))
+        for be in ("amw", "maw"):
+            for flow in Dataflow:
+                b = pm.cnn_inference(
+                    layers, pm.AcceleratorConfig.equal_area(be, flow, dr))
+                assert h.fps > b.fps
+                assert h.fps_per_watt > b.fps_per_watt
+
+    def test_paper_headline_gmean_ratios_at_1gsps(self):
+        """Abstract: >=66x FPS and >=84x FPS/W on gmean (equal area).
+
+        Our model reproduces the FPS claim with margin and lands within
+        ~25% of the FPS/W anchor it was calibrated against (DESIGN.md §6).
+        """
+        ratios_fps, ratios_w = [], []
+        for name, fn in cnn.CNN_ZOO.items():
+            layers = fn()
+            h = pm.cnn_inference(layers, pm.AcceleratorConfig.equal_area(
+                "heana", Dataflow.OS, 1.0))
+            for be in ("amw", "maw"):
+                best_fps = max(pm.cnn_inference(
+                    layers, pm.AcceleratorConfig.equal_area(be, f, 1.0)).fps
+                    for f in Dataflow)
+                best_w = max(pm.cnn_inference(
+                    layers, pm.AcceleratorConfig.equal_area(
+                        be, f, 1.0)).fps_per_watt for f in Dataflow)
+                ratios_fps.append(h.fps / best_fps)
+                ratios_w.append(h.fps_per_watt / best_w)
+        assert pm.gmean(ratios_fps) >= 66.0
+        assert pm.gmean(ratios_w) >= 0.75 * 84.0
+
+    def test_ws_best_dataflow_for_thermo_optic_baselines(self):
+        layers = cnn.CNN_ZOO["resnet50"]()
+        for be in ("amw", "maw"):
+            fps = {f: pm.cnn_inference(
+                layers, pm.AcceleratorConfig.equal_area(be, f, 1.0)).fps
+                for f in Dataflow}
+            assert fps[Dataflow.WS] > fps[Dataflow.OS]
+            assert fps[Dataflow.WS] > fps[Dataflow.IS]
+
+    def test_os_best_dataflow_for_heana(self):
+        # OS dominates on every CNN (paper §6.3); the WS-vs-IS order is
+        # shape dependent in our model (WS spills the capacitor bank when a
+        # layer's C exceeds p=4608, e.g. early ResNet50 layers).
+        for name, fn in cnn.CNN_ZOO.items():
+            layers = fn()
+            fps = {f: pm.cnn_inference(
+                layers, pm.AcceleratorConfig.equal_area("heana", f, 1.0)).fps
+                for f in Dataflow}
+            assert fps[Dataflow.OS] > fps[Dataflow.WS], name
+            assert fps[Dataflow.OS] > fps[Dataflow.IS], name
+
+    def test_bpca_integration_helps_baselines(self):
+        layers = cnn.CNN_ZOO["mobilenet_v2"]()
+        for base, upg in (("amw", "amw_bpca"), ("maw", "maw_bpca")):
+            for flow in Dataflow:
+                b = pm.cnn_inference(
+                    layers, pm.AcceleratorConfig.equal_area(base, flow, 1.0))
+                u = pm.cnn_inference(
+                    layers, pm.AcceleratorConfig.equal_area(upg, flow, 1.0))
+                assert u.fps >= b.fps
+                assert u.energy_j <= b.energy_j
+
+    def test_batch_amortizes_weight_loads(self):
+        layers = cnn.CNN_ZOO["shufflenet_v2"]()
+        acc = pm.AcceleratorConfig.equal_area("amw", Dataflow.WS, 1.0)
+        b1 = pm.cnn_inference(layers, acc, batch=1)
+        b256 = pm.cnn_inference(layers, acc, batch=256)
+        assert b256.fps > 2 * b1.fps   # tuning amortized over the batch
+
+    def test_energy_breakdown_positive_and_consistent(self):
+        layers = cnn.CNN_ZOO["googlenet"]()
+        r = pm.cnn_inference(layers, pm.AcceleratorConfig.equal_area(
+            "heana", Dataflow.OS, 1.0))
+        b = r.breakdown
+        parts = [b.laser, b.dac, b.adc, b.tuning, b.buffer, b.reduction,
+                 b.static]
+        assert all(p >= 0 for p in parts)
+        assert abs(sum(parts) - r.energy_j) < 1e-12 + 1e-6 * r.energy_j

@@ -1,0 +1,85 @@
+"""Flash-attention kernel sweeps vs dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention_fwd,
+                                           flash_attention_reference)
+
+
+def _qkv(bh, s, d, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, (bh, s, d), dtype) for k in ks)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,d,bq,bk", [
+        (32, 16, 8, 8), (64, 32, 16, 16), (128, 64, 128, 128),
+        (48, 16, 16, 8),
+    ])
+    def test_causal_matches_reference(self, s, d, bq, bk):
+        q, k, v = _qkv(2, s, d, seed=s)
+        got = flash_attention_fwd(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+        want = flash_attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [4, 16])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(1, 40, 16, seed=window)
+        got = flash_attention_fwd(q, k, v, causal=True, window=window,
+                                  block_q=8, block_k=8, interpret=True)
+        want = flash_attention_reference(q, k, v, causal=True,
+                                         window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_non_causal_with_padding(self):
+        # S=33 pads to 40 with block 8: padded keys must get zero weight
+        q, k, v = _qkv(1, 33, 16, seed=7)
+        got = flash_attention_fwd(q, k, v, causal=False, block_q=8,
+                                  block_k=8, interpret=True)
+        want = flash_attention_reference(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bfloat16(self):
+        q, k, v = _qkv(2, 32, 32, seed=3, dtype=jnp.bfloat16)
+        got = flash_attention_fwd(q, k, v, block_q=16, block_k=16,
+                                  interpret=True)
+        want = flash_attention_reference(q, k, v)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_ragged_seq_padding_path(self):
+        q, k, v = _qkv(1, 37, 16, seed=11)
+        got = flash_attention_fwd(q, k, v, causal=True, block_q=16,
+                                  block_k=16, interpret=True)
+        want = flash_attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttentionInModel:
+    def test_model_attention_impl_parity(self):
+        """attn_impl='pallas' == default XLA path, incl. padded heads and
+        sliding windows."""
+        import dataclasses
+        from repro.models import attention as A
+        from repro.models import layers as L
+
+        spec = A.AttnSpec(d_model=48, num_heads=3, num_kv_heads=1,
+                          head_dim=16, head_pad=4)
+        p = A.make_attention(L.ParamMaker(jax.random.PRNGKey(0),
+                                          dtype=jnp.float32), "a", spec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 48))
+        pos = jnp.broadcast_to(jnp.arange(24)[None], (2, 24))
+        for s in (spec, dataclasses.replace(spec, window=8)):
+            o_xla, _ = A.attention(p, x, pos, s)
+            o_pal, _ = A.attention(p, x, pos, s, attn_impl="pallas")
+            np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_pal),
+                                       rtol=2e-5, atol=2e-5)

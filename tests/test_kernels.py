@@ -1,0 +1,191 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.photonic_gemm import sample_noise
+from repro.core.taom import quantize
+from repro.core.types import Backend, PhotonicConfig
+from repro.kernels import ops, ref
+from repro.kernels.taom_gemm import calibrated_adc_fs, taom_gemm_quantized
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+class TestTaomGemmKernel:
+    @pytest.mark.parametrize("m,k,d", [
+        (8, 83, 8), (24, 300, 40), (128, 256, 128), (1, 1, 1),
+        (7, 130, 3), (130, 4096, 64),
+    ])
+    @pytest.mark.parametrize("backend", [Backend.HEANA, Backend.AMW,
+                                         Backend.MAW])
+    def test_shape_sweep_matches_oracle(self, m, k, d, backend):
+        cfg = PhotonicConfig(backend=backend, bits=4, dpe_size=83, adc_bits=8)
+        x, w = _rand((m, k), k + 1), _rand((k, d), d + 1)
+        xq, _ = quantize(x, cfg.bits)
+        wq, _ = quantize(w, cfg.bits, axis=0)
+        noise = sample_noise(jax.random.PRNGKey(7), x.shape, w.shape, cfg)
+        if backend in (Backend.AMW, Backend.MAW):
+            noise = jnp.moveaxis(noise, -2, 0)
+        fs = calibrated_adc_fs(k, cfg)
+        got = taom_gemm_quantized(xq, wq, noise, cfg, fs, interpret=True)
+        want = ref.taom_gemm_reference(xq, wq, noise, cfg, fs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("dpe", [1, 7, 83, 128, 200])
+    def test_dpe_size_sweep(self, dpe):
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=dpe,
+                             adc_bits=10)
+        x, w = _rand((16, 260), 3), _rand((260, 24), 4)
+        xq, _ = quantize(x, cfg.bits)
+        wq, _ = quantize(w, cfg.bits, axis=0)
+        noise = sample_noise(jax.random.PRNGKey(8), x.shape, w.shape, cfg)
+        fs = calibrated_adc_fs(260, cfg)
+        got = taom_gemm_quantized(xq, wq, noise, cfg, fs, interpret=True)
+        want = ref.taom_gemm_reference(xq, wq, noise, cfg, fs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep_via_wrapper(self, dtype):
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=4, dpe_size=83)
+        x, w = _rand((12, 200), 5, dtype), _rand((200, 16), 6, dtype)
+        a = ops.photonic_matmul(x, w, cfg, key=jax.random.PRNGKey(9),
+                                impl="pallas")
+        b = ops.photonic_matmul(x, w, cfg, key=jax.random.PRNGKey(9),
+                                impl="ref")
+        assert a.dtype == dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_wrapper_batched_input(self):
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=8, dpe_size=64,
+                             noise_enabled=False)
+        x, w = _rand((2, 3, 96), 10), _rand((96, 8), 11)
+        out = ops.photonic_matmul(x, w, cfg, impl="pallas")
+        assert out.shape == (2, 3, 8)
+        want = ops.photonic_matmul(x, w, cfg, impl="ref")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_exact_backend_bypasses_kernel(self):
+        cfg = PhotonicConfig(backend=Backend.EXACT)
+        x, w = _rand((4, 32), 12), _rand((32, 8), 13)
+        np.testing.assert_allclose(
+            np.asarray(ops.photonic_matmul(x, w, cfg)), np.asarray(x @ w),
+            rtol=1e-6)
+
+    def test_ste_gradients_through_kernel(self):
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=4, dpe_size=83,
+                             noise_enabled=False)
+        x, w = _rand((8, 166), 14), _rand((166, 8), 15)
+
+        def loss(x, w):
+            return jnp.sum(ops.photonic_matmul(x, w, cfg, impl="pallas") ** 2)
+
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+        out = ops.photonic_matmul(x, w, cfg, impl="pallas")
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(2 * out @ w.T),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ (2 * out)),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(m=st.integers(1, 40), k=st.integers(1, 300), d=st.integers(1, 40),
+           bits=st.sampled_from([2, 4, 8]))
+    @settings(max_examples=12, deadline=None)
+    def test_property_kernel_oracle_parity(self, m, k, d, bits):
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=bits, dpe_size=83,
+                             adc_bits=10)
+        x, w = _rand((m, k), m * 7 + k), _rand((k, d), d * 13 + 1)
+        xq, _ = quantize(x, cfg.bits)
+        wq, _ = quantize(w, cfg.bits, axis=0)
+        noise = sample_noise(jax.random.PRNGKey(m + d), x.shape, w.shape, cfg)
+        fs = calibrated_adc_fs(k, cfg)
+        got = taom_gemm_quantized(xq, wq, noise, cfg, fs, interpret=True)
+        want = ref.taom_gemm_reference(xq, wq, noise, cfg, fs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+
+class TestSsdScan:
+    def _naive(self, x, dt, a, b, c):
+        ys, states = [], []
+        for i in range(x.shape[0]):
+            y, s = ref.ssd_scan_reference(
+                x[i][:, None, :], dt[i][:, None], a[i][None],
+                b[i][:, None, :], c[i][:, None, :])
+            ys.append(y[:, 0])
+            states.append(s[0])
+        return jnp.stack(ys), jnp.stack(states)
+
+    def _inputs(self, bh, l, p, s, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = jax.random.normal(ks[0], (bh, l, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, l)))
+        a = -jnp.exp(jax.random.normal(ks[2], (bh,)))
+        b = jax.random.normal(ks[3], (bh, l, s))
+        c = jax.random.normal(ks[4], (bh, l, s))
+        return x, dt, a, b, c
+
+    @pytest.mark.parametrize("bh,l,p,s,chunk", [
+        (2, 32, 8, 16, 8), (3, 40, 16, 24, 16), (1, 128, 64, 32, 128),
+        (2, 33, 8, 8, 16),   # ragged L -> padding path
+    ])
+    def test_pallas_and_jax_match_naive(self, bh, l, p, s, chunk):
+        x, dt, a, b, c = self._inputs(bh, l, p, s, seed=l)
+        y_ref, st_ref = self._naive(x, dt, a, b, c)
+        for impl in ("jax", "pallas"):
+            y, st = ops.ssd_scan(x, dt, a, b, c, chunk=chunk, impl=impl)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=1e-4, atol=1e-4, err_msg=impl)
+            np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                                       rtol=1e-4, atol=1e-4, err_msg=impl)
+
+    def test_decode_step_matches_scan(self):
+        bh, l, p, s = 2, 24, 8, 12
+        x, dt, a, b, c = self._inputs(bh, l, p, s, seed=5)
+        y_scan, st_scan = ops.ssd_scan(x, dt, a, b, c, chunk=8, impl="jax")
+        st = jnp.zeros((bh, p, s))
+        ys = []
+        for t in range(l):
+            yt, st = ops.ssd_decode_step(st, x[:, t], dt[:, t], a,
+                                         b[:, t], c[:, t])
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                                   np.asarray(y_scan), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_scan),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_jax_impl_differentiable(self):
+        x, dt, a, b, c = self._inputs(2, 16, 4, 8, seed=9)
+
+        def loss(x, b, c):
+            y, _ = ops.ssd_scan(x, dt, a, b, c, chunk=8, impl="jax")
+            return jnp.sum(y ** 2)
+
+        grads = jax.grad(loss, argnums=(0, 1, 2))(x, b, c)
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in grads)
+
+    def test_state_continuation_property(self):
+        # Scanning [0:L] must equal scanning [0:L/2] then continuing with
+        # the decode step over the second half.
+        bh, l, p, s = 1, 16, 4, 6
+        x, dt, a, b, c = self._inputs(bh, l, p, s, seed=11)
+        y_full, _ = ops.ssd_scan(x, dt, a, b, c, chunk=8, impl="jax")
+        _, st_half = ops.ssd_scan(x[:, :8], dt[:, :8], a, b[:, :8], c[:, :8],
+                                  chunk=8, impl="jax")
+        st = st_half
+        ys = []
+        for t in range(8, l):
+            yt, st = ops.ssd_decode_step(st, x[:, t], dt[:, t], a,
+                                         b[:, t], c[:, t])
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                                   np.asarray(y_full[:, 8:]),
+                                   rtol=1e-4, atol=1e-4)

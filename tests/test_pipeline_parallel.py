@@ -1,0 +1,56 @@
+"""Pipeline-parallel schedule tests (single-device mesh: the schedule and
+collective pattern are what's under test; stage count 1..n devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.pipeline_parallel import bubble_fraction, pipeline_forward
+
+
+def _block(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+def _stage_params(n_stages, d, key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (n_stages, d, d)) / jnp.sqrt(d),
+            "b": jnp.zeros((n_stages, d))}
+
+
+class TestPipeline:
+    def test_bubble_fraction(self):
+        assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+        assert bubble_fraction(1, 8) == 0.0
+        assert bubble_fraction(4, 28) < 0.1
+
+    @pytest.mark.parametrize("m", [1, 2, 5])
+    def test_matches_sequential_single_stage_mesh(self, m):
+        """On however many devices exist, PP output == sequential layers."""
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("stage",))
+        d = 8
+        params = _stage_params(n, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, 4, d))
+
+        y_pp = pipeline_forward(_block, params, x, mesh, "stage")
+
+        def sequential(mb):
+            for s in range(n):
+                mb = _block(jax.tree.map(lambda a, s=s: a[s], params), mb)
+            return mb
+
+        y_ref = jax.vmap(sequential)(x)
+        np.testing.assert_allclose(np.asarray(y_pp), np.asarray(y_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_jit_compiles_one_program(self):
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("stage",))
+        params = _stage_params(n, 8)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 2, 8))
+        f = jax.jit(lambda p, x: pipeline_forward(_block, p, x, mesh))
+        np.testing.assert_allclose(
+            np.asarray(f(params, x)),
+            np.asarray(pipeline_forward(_block, params, x, mesh)),
+            rtol=1e-5)
