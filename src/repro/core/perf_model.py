@@ -102,8 +102,16 @@ def gemm_cost(g: df.GemmShape, acc: AcceleratorConfig,
         / max(acc.m, 1)
     t_dpu = t_stream + t_weights + t_psum + t_readout
 
-    # GEMMs parallelize across DPUs (output tiling — embarrassingly parallel)
-    latency = t_dpu / acc.n_dpus + t_weights * 0.0
+    # GEMMs parallelize across DPUs (output tiling — embarrassingly
+    # parallel).  This division applies to *every* term, including
+    # t_weights: the schedule counts above are single-DPU aggregates for
+    # the whole GEMM, and distributing output tiles over n_dpus also
+    # distributes the weight switches — each DPU performs ~1/n_dpus of
+    # them, and different DPUs actuate their rings concurrently.  (A
+    # stationary-operand hold that spans tiles on several DPUs is
+    # duplicated, not serialized, so thermo-optic actuation never becomes
+    # a sequential bottleneck across DPUs.)
+    latency = t_dpu / acc.n_dpus
 
     # ---- energy across the accelerator ----
     e = en.EnergyBreakdown()
@@ -128,6 +136,53 @@ def gemm_cost(g: df.GemmShape, acc: AcceleratorConfig,
     return GemmCost(latency, e)
 
 
+# ---------------------------------------------------------------------------
+# Plan-friendly cost API (consumed by repro.exec.scheduler)
+# ---------------------------------------------------------------------------
+def dataflow_costs(g: df.GemmShape, acc: AcceleratorConfig,
+                   flows: Iterable[Dataflow] = tuple(Dataflow),
+                   ) -> Dict[Dataflow, GemmCost]:
+    """Cost of one GEMM under each candidate dataflow on the same hardware.
+
+    The accelerator's own ``acc.dataflow`` is ignored — each candidate is
+    evaluated with the dataflow swapped in, everything else held fixed.
+    (Always at default OpticalParams: the plan cache keys on the
+    accelerator config alone, so a non-default optics knob here would
+    alias cache entries.)
+    """
+    return {flow: gemm_cost(g, dataclasses.replace(acc, dataflow=flow))
+            for flow in flows}
+
+
+def best_dataflow(g: df.GemmShape, acc: AcceleratorConfig,
+                  flows: Iterable[Dataflow] = tuple(Dataflow),
+                  objective: str = "latency",
+                  ) -> tuple[Dataflow, GemmCost, Dict[Dataflow, GemmCost]]:
+    """Argmin dataflow for one GEMM under ``objective``.
+
+    objective: 'latency' | 'energy' | 'edp'.  Ties break deterministically
+    by (secondary metric, enum order) so plans are reproducible.
+    Returns (winner, winner's cost, all candidate costs).
+    """
+    costs = dataflow_costs(g, acc, flows)
+
+    def score(item):
+        flow, cost = item
+        lat, e = cost.latency_s, cost.energy.total
+        if objective == "latency":
+            key = (lat, e)
+        elif objective == "energy":
+            key = (e, lat)
+        elif objective == "edp":
+            key = (lat * e, lat)
+        else:
+            raise ValueError(f"unknown objective: {objective!r}")
+        return (*key, list(Dataflow).index(flow))
+
+    flow, cost = min(costs.items(), key=score)
+    return flow, cost, costs
+
+
 @dataclasses.dataclass
 class InferenceResult:
     fps: float
@@ -138,18 +193,32 @@ class InferenceResult:
 
 
 def cnn_inference(layers: Iterable[LayerGemm], acc: AcceleratorConfig,
-                  batch: int = 1) -> InferenceResult:
+                  batch: int = 1,
+                  dataflows: Iterable[Dataflow] | None = None,
+                  ) -> InferenceResult:
     """FPS and FPS/W for a CNN (list of GEMM layers) on an accelerator.
 
     Batch size multiplies the Toeplitz row count C (paper evaluates
     batch = 1 and 256): weight-stationary schedules amortize their weight
     loads over the whole batch.
+
+    ``dataflows`` optionally overrides ``acc.dataflow`` per layer (same
+    length as ``layers``) — the mixed-dataflow execution a HEANA plan from
+    repro.exec.scheduler describes.
     """
+    layers = list(layers)
+    if dataflows is None:
+        per_layer_acc = [acc] * len(layers)
+    else:
+        per_layer_acc = [dataclasses.replace(acc, dataflow=flow)
+                         for flow in dataflows]
+        if len(per_layer_acc) != len(layers):
+            raise ValueError("dataflows must match layers one-to-one")
     total_t = 0.0
     total_e = en.EnergyBreakdown()
-    for layer in layers:
+    for layer, layer_acc in zip(layers, per_layer_acc):
         g = df.GemmShape(layer.c * batch, layer.k, layer.d)
-        cost = gemm_cost(g, acc)
+        cost = gemm_cost(g, layer_acc)
         # `count` independent GEMM instances (depthwise groups): total DPU
         # work scales by count, still spread over the same n_dpus.
         total_t += cost.latency_s * layer.count

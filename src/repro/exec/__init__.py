@@ -1,0 +1,28 @@
+"""Photonic execution engine: dataflow auto-scheduler + Pallas CNN executor.
+
+The three layers (see ISSUE 1 / paper §4, §6.3):
+
+  * scheduler — per-layer {OS, IS, WS} x tiling search over the
+    event-driven perf model, with a content-addressed plan cache;
+  * executor  — runs each planned GEMM through the Pallas TAOM kernel
+    (quantize -> kernel -> rescale), batch folded into the GEMM M axis,
+    noise keys threaded per layer;
+  * report    — modeled latency/energy aggregated next to executed
+    numerics, feeding benchmarks/autoflow.py and examples.
+"""
+from repro.exec.executor import (ExecutionResult, LayerTrace, execute_cnn,
+                                 plan_for_network, reference_forward)
+from repro.exec.plan_cache import GLOBAL_PLAN_CACHE, PlanCache, fingerprint
+from repro.exec.report import (execution_summary, plan_summary, plan_table,
+                               plan_vs_fixed, render_report, save_summary)
+from repro.exec.scheduler import (CnnPlan, LayerPlan, TileChoice, plan_layer,
+                                  schedule_cnn)
+
+__all__ = [
+    "CnnPlan", "LayerPlan", "TileChoice", "plan_layer", "schedule_cnn",
+    "PlanCache", "GLOBAL_PLAN_CACHE", "fingerprint",
+    "ExecutionResult", "LayerTrace", "execute_cnn", "plan_for_network",
+    "reference_forward",
+    "plan_summary", "plan_table", "plan_vs_fixed", "execution_summary",
+    "render_report", "save_summary",
+]

@@ -1,0 +1,162 @@
+"""End-to-end CNN executor over the Pallas TAOM kernel.
+
+Runs a *runnable* GEMM-lowered CNN (models.cnn.LoweredLayer structure +
+params dict) image-batch in, logits out, with every GEMM executed by
+kernels.ops.photonic_matmul: quantize -> TAOM kernel (Pallas; interpreted
+on CPU) -> rescale.  This turns the repo's analytic per-figure scripts
+into an actual inference engine producing real activations.
+
+Batching follows the paper's Toeplitz accounting: the image batch folds
+into the GEMM M axis (all images' im2col rows concatenated), which is both
+the batch-serving shape and what core.perf_model charges for batched
+layers.  Detection-noise keys are threaded per layer — fold_in(key,
+layer_index) — so every layer draws independent noise and runs are
+reproducible from one root key.
+
+The executor consumes a CnnPlan from exec.scheduler: each layer's GEMM
+uses the plan's kernel tiling (block_m, block_d).  The plan's *dataflow*
+choice changes scheduling (latency/energy in the report), never numerics —
+with noise disabled the executed network equals the pure-jnp reference
+(kernels/ref.py) bit-exactly, whatever the plan says (tests pin this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PhotonicConfig
+from repro.exec.scheduler import CnnPlan, LayerPlan
+from repro.kernels import ops
+from repro.models import cnn as cnn_mod
+
+
+@dataclasses.dataclass
+class LayerTrace:
+    """What actually ran for one layer (executed next to modeled)."""
+    name: str
+    m: int
+    k: int
+    d: int
+    dataflow: str
+    block_m: int
+    block_d: int
+    latency_s: float       # modeled (from the plan)
+    energy_j: float        # modeled (from the plan)
+    out_mean_abs: float    # executed-numerics fingerprint
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    logits: jnp.ndarray
+    plan: CnnPlan
+    traces: List[LayerTrace]
+    activations: Optional[List[jnp.ndarray]] = None
+
+    @property
+    def modeled_latency_s(self) -> float:
+        return self.plan.latency_s
+
+    @property
+    def modeled_fps(self) -> float:
+        return self.plan.fps
+
+
+def _maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def _layer_matmul(cols: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
+                  key: Optional[jax.Array], plan: LayerPlan,
+                  impl: str) -> jnp.ndarray:
+    return ops.photonic_matmul(cols, w, cfg, key=key, impl=impl,
+                               block_m=plan.tile.block_m,
+                               block_d=plan.tile.block_d)
+
+
+def execute_cnn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                plan: CnnPlan, cfg: PhotonicConfig,
+                key: Optional[jax.Array] = None,
+                impl: str = "auto",
+                lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
+                collect_activations: bool = False) -> ExecutionResult:
+    """Run a lowered CNN end-to-end through the photonic kernel.
+
+    params: weight dict keyed by LoweredLayer.name, each (K, D).
+    x: (N, H, W, C) image batch.
+    plan: CnnPlan over lowered_gemms(params, lowering) at batch >= 1 —
+      layer order must match the lowering (schedule_cnn preserves it).
+    key: root PRNG key for detection noise (per-layer keys are folded in);
+      None or cfg.noise_enabled=False runs deterministically.
+    impl: 'pallas' | 'ref' | 'auto' (forwarded to ops.photonic_matmul).
+    """
+    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
+    if len(plan.layers) != len(lowering):
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers, lowering has "
+            f"{len(lowering)} — plan the lowered_gemms of this network")
+    n = x.shape[0]
+    if n != plan.batch:
+        raise ValueError(
+            f"plan was scheduled for batch {plan.batch} but x has batch "
+            f"{n} — modeled and executed numbers would disagree")
+    traces: List[LayerTrace] = []
+    acts: List[jnp.ndarray] = []
+
+    for idx, (lyr, lplan) in enumerate(zip(lowering, plan.layers)):
+        w = params[lyr.name]
+        layer_key = (jax.random.fold_in(key, idx)
+                     if key is not None and cfg.noise_enabled else None)
+        if lyr.kind == "conv":
+            hw = x.shape[1]
+            cols = cnn_mod._im2col(x, lyr.kk)           # (N, HW, K)
+            out = _layer_matmul(cols.reshape(-1, cols.shape[-1]), w, cfg,
+                                layer_key, lplan, impl)
+            x = out.reshape(n, hw, hw, w.shape[-1])
+        elif lyr.kind == "fc":
+            out = _layer_matmul(x.reshape(n, -1), w, cfg, layer_key, lplan,
+                                impl)
+            x = out
+        else:
+            raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
+        if lyr.relu:
+            x = jax.nn.relu(x)
+        if lyr.pool_after:
+            x = _maxpool2x2(x)
+        traces.append(LayerTrace(
+            name=lyr.name, m=out.shape[0] if out.ndim == 2 else -1,
+            k=w.shape[0], d=w.shape[1], dataflow=lplan.dataflow.value,
+            block_m=lplan.tile.block_m, block_d=lplan.tile.block_d,
+            latency_s=lplan.latency_s, energy_j=lplan.energy_j,
+            out_mean_abs=float(jnp.mean(jnp.abs(x)))))
+        if collect_activations:
+            acts.append(x)
+
+    return ExecutionResult(logits=x, plan=plan, traces=traces,
+                           activations=acts if collect_activations else None)
+
+
+def reference_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                      cfg: PhotonicConfig) -> jnp.ndarray:
+    """Pure-jnp oracle forward: same quantize->accumulate->ADC math via
+    kernels/ref.py, driven through the model's own apply function.
+
+    The bit-exactness contract (noise disabled): execute_cnn(...,
+    impl='pallas') must equal this exactly — the Pallas path introduces
+    zero numeric deviation, padding included.
+    """
+    mm: Callable = lambda a, w: ops.photonic_matmul(a, w, cfg, impl="ref")
+    return cnn_mod.small_cnn_apply(params, x, matmul=mm)
+
+
+def plan_for_network(params: Dict[str, jnp.ndarray],
+                     acc, batch: int = 1, in_hw: int = 16,
+                     lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
+                     **schedule_kw) -> CnnPlan:
+    """Convenience: lower a runnable network's GEMM table and schedule it."""
+    from repro.exec.scheduler import schedule_cnn
+    gemms = cnn_mod.lowered_gemms(params, lowering, in_hw)
+    return schedule_cnn(gemms, acc, batch=batch, **schedule_kw)

@@ -1,0 +1,83 @@
+"""Content-addressed plan cache for the dataflow auto-scheduler.
+
+Planning a layer means sweeping {OS, IS, WS} x tiling through the
+event-driven perf model.  CNNs repeat shapes heavily (ResNet50's 16
+bottlenecks contribute ~4 distinct GEMM shapes), and a serving fleet
+re-plans the same (shape, accelerator) pairs on every process start — so
+plans are cached under a digest of *what determines them*: the GEMM shape,
+the accelerator configuration, and the search objective.  Nothing else
+(layer names, wall-clock, process) enters the key, which makes the cache
+safely shareable across CNNs, sessions, and hosts.
+
+The store is in-memory with optional JSON persistence (``dump``/``load``)
+so a warmed cache can ship with a deployment.  Values are JSON-safe plan
+dicts (the scheduler owns (de)serialization of its LayerPlan type).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from typing import Dict, Optional
+
+
+def fingerprint(payload: dict) -> str:
+    """Content address of a planning problem: sha256 of canonical JSON."""
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+class PlanCache:
+    """Thread-safe content-addressed store of solved layer plans."""
+
+    def __init__(self) -> None:
+        self._store: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            val = self._store.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return dict(val)
+
+    def put(self, key: str, value: dict) -> None:
+        with self._lock:
+            self._store[key] = dict(value)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+
+    # -- persistence --------------------------------------------------------
+    def dump(self, path: str) -> None:
+        with self._lock:
+            blob = json.dumps(self._store, sort_keys=True)
+        with open(path, "w") as fh:
+            fh.write(blob)
+
+    def load(self, path: str) -> int:
+        """Merge entries from ``path``; returns how many were loaded."""
+        with open(path) as fh:
+            entries = json.load(fh)
+        with self._lock:
+            self._store.update(entries)
+        return len(entries)
+
+
+# Process-wide default cache (schedule_cnn uses it unless handed another).
+GLOBAL_PLAN_CACHE = PlanCache()

@@ -1,0 +1,216 @@
+"""Per-layer dataflow auto-scheduler (the paper's "flexible dataflows").
+
+HEANA's TAOM + BPCA combination lets *each layer* of a CNN run under OS,
+IS, or WS instead of the single fixed dataflow of prior MRR accelerators
+(paper §4, §6.3).  This module exploits that: given a CNN as a list of
+im2col GEMMs (models.cnn.LayerGemm) and an AcceleratorConfig, it searches
+per layer over {OS, IS, WS} x kernel tiling with the event-driven cost
+model (core.perf_model.best_dataflow) and emits a LayerPlan per layer plus
+whole-CNN totals.
+
+Because every layer independently takes the argmin of the same cost model
+a fixed dataflow would be charged with, the planned CNN latency is <= the
+latency under ANY single fixed dataflow — the auto-schedule can only tie
+or beat the best fixed choice (benchmarks/autoflow.py asserts this across
+the whole CNN zoo at batch 1 and 256).
+
+Tiling: dataflow choice is an analytic-model decision; the tiling choice
+is an *executor* decision — which (block_m, block_d) output tile the
+Pallas kernel should use for this layer's GEMM.  The search minimizes
+padded-output waste, then grid steps; numerics are tile-invariant, so this
+is purely a performance knob.
+
+Plans are cached content-addressed (exec.plan_cache): repeated shapes and
+configs — within one CNN, across CNNs, or across processes via
+dump()/load() — skip the search entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import dataflow as df
+from repro.core import perf_model as pm
+from repro.core.types import Dataflow
+from repro.exec import plan_cache as pc
+# The kernel's own tile constraints and rounding — imported, not copied,
+# so choose_tile cannot drift from what taom_gemm_quantized actually runs.
+from repro.kernels.taom_gemm import LANE as _LANE
+from repro.kernels.taom_gemm import SUBLANE as _SUBLANE
+from repro.kernels.taom_gemm import _round_up
+from repro.models.cnn import LayerGemm
+
+_BLOCK_M_CANDIDATES = (8, 16, 32, 64, 128, 256)
+_BLOCK_D_CANDIDATES = (128, 256)
+_PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """Kernel output-tile selection for one GEMM (executor knob)."""
+    block_m: int
+    block_d: int
+    grid_m: int
+    grid_d: int
+    n_chunks: int          # temporal folds = ceil(K / DPE size)
+    pad_waste: float       # padded-output overhead fraction (>= 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's scheduled execution: dataflow + tiling + modeled cost."""
+    name: str
+    c: int                 # GEMM rows (batch already folded in)
+    k: int
+    d: int
+    count: int             # parallel instances (depthwise groups)
+    dataflow: Dataflow
+    latency_s: float       # modeled, count included
+    energy_j: float        # modeled (dynamic, no static share), count incl.
+    candidates: Dict[str, float]   # dataflow value -> modeled latency (one
+                                   # instance) for report/debugging
+    tile: TileChoice
+    cache_key: str
+    cache_hit: bool
+
+    @property
+    def gemm(self) -> df.GemmShape:
+        return df.GemmShape(self.c, self.k, self.d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnPlan:
+    """A whole CNN's auto-scheduled execution plan."""
+    layers: Tuple[LayerPlan, ...]
+    acc: pm.AcceleratorConfig
+    batch: int
+    objective: str
+    result: pm.InferenceResult     # perf-model totals under the plan
+    cache_hits: int
+    cache_misses: int
+
+    @property
+    def dataflows(self) -> Tuple[Dataflow, ...]:
+        return tuple(p.dataflow for p in self.layers)
+
+    @property
+    def latency_s(self) -> float:
+        return self.result.latency_s
+
+    @property
+    def fps(self) -> float:
+        return self.result.fps
+
+    @property
+    def fps_per_watt(self) -> float:
+        return self.result.fps_per_watt
+
+    def mix(self) -> Dict[str, int]:
+        """How many layers landed on each dataflow."""
+        out = {f.value: 0 for f in Dataflow}
+        for p in self.layers:
+            out[p.dataflow.value] += 1
+        return out
+
+
+def choose_tile(m: int, d: int, k: int, dpe_size: int) -> TileChoice:
+    """Pick the kernel (block_m, block_d) for an (M, D) output.
+
+    Minimize padded-output elements first (don't burn MXU cycles on
+    padding), then grid steps (fewer, larger tiles win ties).  Mirrors the
+    kernel's own clamping so grid numbers here are exactly what it runs.
+    """
+    best = None
+    for bm in _BLOCK_M_CANDIDATES:
+        bm_eff = min(bm, _round_up(m, _SUBLANE))
+        for bd in _BLOCK_D_CANDIDATES:
+            bd_eff = min(bd, _round_up(d, _LANE))
+            mp, dp = _round_up(m, bm_eff), _round_up(d, bd_eff)
+            grid_m, grid_d = mp // bm_eff, dp // bd_eff
+            score = (mp * dp, grid_m * grid_d, bm_eff, bd_eff)
+            if best is None or score < best[0]:
+                waste = mp * dp / float(m * d) - 1.0
+                best = (score, TileChoice(bm_eff, bd_eff, grid_m, grid_d,
+                                          max(1, -(-k // dpe_size)), waste))
+    return best[1]
+
+
+def _cache_payload(g: df.GemmShape, count: int, acc: pm.AcceleratorConfig,
+                   objective: str, flows: Sequence[Dataflow]) -> dict:
+    return {
+        "v": _PLAN_VERSION,
+        "gemm": [g.c, g.k, g.d],
+        "count": count,
+        "acc": [acc.backend, acc.data_rate_gsps, acc.n, acc.m, acc.n_dpus],
+        "objective": objective,
+        "flows": sorted(f.value for f in flows),
+        "tiles": [_BLOCK_M_CANDIDATES, _BLOCK_D_CANDIDATES],
+    }
+
+
+def _plan_to_dict(p: LayerPlan) -> dict:
+    d = dataclasses.asdict(p)
+    d["dataflow"] = p.dataflow.value
+    d.pop("name")          # content-addressed: names don't enter the cache
+    d.pop("cache_hit")
+    return d
+
+
+def _plan_from_dict(d: dict, name: str, cache_hit: bool) -> LayerPlan:
+    return LayerPlan(name=name, c=d["c"], k=d["k"], d=d["d"],
+                     count=d["count"], dataflow=Dataflow(d["dataflow"]),
+                     latency_s=d["latency_s"], energy_j=d["energy_j"],
+                     candidates=dict(d["candidates"]),
+                     tile=TileChoice(**d["tile"]),
+                     cache_key=d["cache_key"], cache_hit=cache_hit)
+
+
+def plan_layer(layer: LayerGemm, acc: pm.AcceleratorConfig, batch: int = 1,
+               objective: str = "latency",
+               flows: Sequence[Dataflow] = tuple(Dataflow),
+               cache: Optional[pc.PlanCache] = None) -> LayerPlan:
+    """Schedule one layer: search dataflows x tiling, cache the result."""
+    cache = cache if cache is not None else pc.GLOBAL_PLAN_CACHE
+    g = df.GemmShape(layer.c * batch, layer.k, layer.d)
+    key = pc.fingerprint(_cache_payload(g, layer.count, acc, objective,
+                                        flows))
+    cached = cache.get(key)
+    if cached is not None:
+        return _plan_from_dict(cached, layer.name, cache_hit=True)
+
+    flow, cost, costs = pm.best_dataflow(g, acc, flows, objective)
+    tile = choose_tile(g.c, g.d, g.k, acc.n)
+    plan = LayerPlan(
+        name=layer.name, c=g.c, k=g.k, d=g.d, count=layer.count,
+        dataflow=flow,
+        latency_s=cost.latency_s * layer.count,
+        energy_j=cost.energy.total * layer.count,
+        candidates={f.value: c.latency_s for f, c in costs.items()},
+        tile=tile, cache_key=key, cache_hit=False)
+    cache.put(key, _plan_to_dict(plan))
+    return plan
+
+
+def schedule_cnn(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
+                 batch: int = 1, objective: str = "latency",
+                 flows: Sequence[Dataflow] = tuple(Dataflow),
+                 cache: Optional[pc.PlanCache] = None) -> CnnPlan:
+    """Auto-schedule a whole CNN: per-layer dataflow + tiling plan.
+
+    The returned plan's ``result`` holds the perf-model totals (FPS,
+    FPS/W, latency, energy incl. static) under the mixed dataflows —
+    computed by the same core.perf_model.cnn_inference everything else in
+    the repo uses, so planned numbers are directly comparable to the
+    fixed-dataflow figures of Figs. 11-14.
+    """
+    cache = cache if cache is not None else pc.GLOBAL_PLAN_CACHE
+    layers = list(layers)
+    plans: List[LayerPlan] = [
+        plan_layer(layer, acc, batch, objective, flows, cache)
+        for layer in layers]
+    result = pm.cnn_inference(layers, acc, batch,
+                              dataflows=[p.dataflow for p in plans])
+    hits = sum(1 for p in plans if p.cache_hit)
+    return CnnPlan(layers=tuple(plans), acc=acc, batch=batch,
+                   objective=objective, result=result,
+                   cache_hits=hits, cache_misses=len(plans) - hits)

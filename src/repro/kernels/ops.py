@@ -33,29 +33,30 @@ def _on_cpu() -> bool:
 # photonic_matmul
 # ---------------------------------------------------------------------------
 def _taom_forward(x2d: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
-                  cfg: PhotonicConfig, adc_fs: float, impl: str
-                  ) -> jnp.ndarray:
+                  cfg: PhotonicConfig, adc_fs: float, impl: str,
+                  blocks: tuple) -> jnp.ndarray:
     f32 = jnp.float32
     xq, sx = quantize(x2d.astype(f32), cfg.bits, axis=None)
     wq, sw = quantize(w.astype(f32), cfg.bits, axis=0)
     if impl == "pallas":
         acc = taom_kernel_mod.taom_gemm_quantized(
-            xq, wq, noise, cfg, adc_fs, interpret=_on_cpu())
+            xq, wq, noise, cfg, adc_fs, block_m=blocks[0], block_d=blocks[1],
+            interpret=_on_cpu())
     else:
         acc = ref_mod.taom_gemm_reference(xq, wq, noise, cfg, adc_fs)
     return (acc * (sx * sw)).astype(x2d.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _taom_ste(x2d, w, noise, cfg, adc_fs, impl):
-    return _taom_forward(x2d, w, noise, cfg, adc_fs, impl)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _taom_ste(x2d, w, noise, cfg, adc_fs, impl, blocks):
+    return _taom_forward(x2d, w, noise, cfg, adc_fs, impl, blocks)
 
 
-def _taom_ste_fwd(x2d, w, noise, cfg, adc_fs, impl):
-    return _taom_forward(x2d, w, noise, cfg, adc_fs, impl), (x2d, w)
+def _taom_ste_fwd(x2d, w, noise, cfg, adc_fs, impl, blocks):
+    return _taom_forward(x2d, w, noise, cfg, adc_fs, impl, blocks), (x2d, w)
 
 
-def _taom_ste_bwd(cfg, adc_fs, impl, res, g):
+def _taom_ste_bwd(cfg, adc_fs, impl, blocks, res, g):
     x2d, w = res
     return (g @ w.T).astype(x2d.dtype), (x2d.T @ g).astype(w.dtype), None
 
@@ -66,11 +67,18 @@ _taom_ste.defvjp(_taom_ste_fwd, _taom_ste_bwd)
 def photonic_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
                     key: Optional[jax.Array] = None,
                     impl: str = "auto",
-                    adc_fs: Optional[float] = None) -> jnp.ndarray:
+                    adc_fs: Optional[float] = None,
+                    block_m: int = 128, block_d: int = 128) -> jnp.ndarray:
     """Photonic-numerics matmul: (..., K) @ (K, D) -> (..., D).
+
+    Arbitrary leading batch dims fold into the GEMM M axis (the
+    batch-serving shape: Toeplitz rows of every image concatenated), which
+    is exactly how the perf model accounts batched CNN layers.
 
     impl: 'pallas' | 'ref' | 'auto' (pallas kernel, interpreted on CPU).
     adc_fs: calibrated PGA full scale; default = analytic calibration.
+    block_m/block_d: kernel output-tile sizes (a LayerPlan's tiling choice
+    from repro.exec.scheduler plugs in here; numerics are tile-invariant).
     """
     if cfg.backend == Backend.EXACT:
         return x @ w
@@ -86,7 +94,8 @@ def photonic_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
         noise = jnp.zeros(noise_shape(x2d.shape, w.shape, cfg), jnp.float32)
     if cfg.backend in (Backend.AMW, Backend.MAW):
         noise = jnp.moveaxis(noise, -2, 0)   # (..., C, D) -> (C, M, D)
-    out = _taom_ste(x2d, w, noise, cfg, float(adc_fs), impl)
+    out = _taom_ste(x2d, w, noise, cfg, float(adc_fs), impl,
+                    (int(block_m), int(block_d)))
     return out.reshape(*batch_shape, w.shape[-1])
 
 

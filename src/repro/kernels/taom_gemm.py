@@ -37,6 +37,10 @@ from repro.core.types import Backend, PhotonicConfig
 LANE = 128
 SUBLANE = 8
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                           getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
@@ -171,7 +175,7 @@ def taom_gemm_quantized(xq: jnp.ndarray, wq: jnp.ndarray,
         out_specs=pl.BlockSpec((bm, bd), lambda i, j, c: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x2, wq_c, noise_p)

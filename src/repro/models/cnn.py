@@ -171,6 +171,77 @@ def total_macs(layers: List[LayerGemm]) -> int:
 
 
 # ---------------------------------------------------------------------------
+# GEMM lowering hooks (consumed by repro.exec — the execution engine)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LoweredLayer:
+    """One GEMM-lowered layer of a *runnable* CNN.
+
+    ``name`` doubles as the params-dict key holding the (K, D) weight
+    matrix.  ``kind`` selects the input transform: 'conv' applies the
+    kk x kk im2col (SAME padding, stride 1) before the GEMM; 'fc' flattens
+    the feature map into a single row per image.  ``relu``/``pool_after``
+    describe the digital post-GEMM stages (activation unit / pooling unit
+    in the accelerator's tile, Fig. 10).
+    """
+    name: str
+    kind: str                 # 'conv' | 'fc'
+    relu: bool = True
+    pool_after: bool = False  # 2x2 max pool, stride 2
+    kk: int = 3
+
+
+def small_cnn_lowering() -> tuple:
+    """The GEMM-lowering of build_small_cnn/small_cnn_apply, layer by layer.
+
+    Kept next to the forward pass so the two cannot drift: the executor
+    (repro.exec.executor) replays exactly this structure through the Pallas
+    kernel, and tests pin it against small_cnn_apply.
+    """
+    return (
+        LoweredLayer("conv1", "conv", relu=True, pool_after=True),
+        LoweredLayer("conv2", "conv", relu=True, pool_after=True),
+        LoweredLayer("conv3", "conv", relu=True, pool_after=False),
+        LoweredLayer("fc", "fc", relu=False, pool_after=False),
+    )
+
+
+def lowered_gemms(params: dict, lowering=None, in_hw: int = 16
+                  ) -> List[LayerGemm]:
+    """Analytic GEMM table (for the scheduler) of a lowered runnable CNN.
+
+    Walks the lowering, tracking the spatial size through the pools, and
+    reads K/D off the actual weight shapes — the same (C, K, D) the
+    executor will feed the kernel, so plans and execution agree.
+    """
+    lowering = lowering or small_cnn_lowering()
+    hw = in_hw
+    out = []
+    prev_d = None
+    for lyr in lowering:
+        k, d = params[lyr.name].shape
+        if lyr.kind == "conv":
+            c = hw * hw
+            if prev_d is not None and k != prev_d * lyr.kk * lyr.kk:
+                raise ValueError(
+                    f"{lyr.name}: weight K={k} but expected "
+                    f"{prev_d}*{lyr.kk}^2={prev_d * lyr.kk ** 2} from the "
+                    f"previous layer's channels")
+        else:
+            c = 1
+            if prev_d is not None and k != hw * hw * prev_d:
+                raise ValueError(
+                    f"{lyr.name}: weight K={k} but the tracked feature map "
+                    f"is {hw}x{hw}x{prev_d}={hw * hw * prev_d} — in_hw "
+                    f"does not match these params")
+        out.append(LayerGemm(lyr.name, c, k, d))
+        prev_d = d
+        if lyr.pool_after:
+            hw //= 2
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Runnable small CNN for the accuracy (Table 4) experiments
 # ---------------------------------------------------------------------------
 def build_small_cnn(key: jax.Array, num_classes: int = 10,

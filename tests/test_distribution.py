@@ -18,6 +18,15 @@ from repro.models import model_zoo as zoo
 from repro.parallel import sharding as shd
 
 
+def _abstract_mesh():
+    """16x16 (data, model) AbstractMesh across jax signature versions."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:                      # older (shape, names) signature
+        return AbstractMesh((16, 16), ("data", "model"))
+
+
 class TestSpecMapping:
     def test_duplicate_mesh_axis_dropped(self):
         # MoE expert tensors: (EXPERT, EMBED, MLP) — expert FSDPs over
@@ -61,8 +70,7 @@ class TestSpecMapping:
 
     def test_divisible_fixup_replicates_odd_vocab(self):
         # whisper vocab 51865 isn't divisible by 16 -> replicated
-        from jax.sharding import AbstractMesh
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = _abstract_mesh()
         cfg = get_config("whisper-tiny")
         abs_p = zoo.init_params(cfg, jax.random.PRNGKey(0), abstract=True)
         specs = zoo.param_specs(cfg)
@@ -80,8 +88,7 @@ class TestSpecMapping:
 
 class TestCacheShardings:
     def _mesh(self):
-        from jax.sharding import AbstractMesh
-        return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh()
 
     def test_attention_cache_seq_sharded(self):
         mesh = self._mesh()

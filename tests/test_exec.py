@@ -1,0 +1,223 @@
+"""Execution-engine tests: scheduler optimality, plan cache, executor
+parity with the pure-jnp oracle (paper §4/§6.3 — flexible dataflows)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import perf_model as pm
+from repro.core.types import Backend, Dataflow, PhotonicConfig
+from repro.exec import (PlanCache, execute_cnn, plan_for_network, plan_layer,
+                        plan_summary, plan_table, plan_vs_fixed,
+                        reference_forward, schedule_cnn)
+from repro.exec.scheduler import choose_tile
+from repro.models import cnn
+from repro.models.cnn import CNN_ZOO, LayerGemm, build_small_cnn
+
+HEANA = pm.AcceleratorConfig.equal_area("heana", Dataflow.OS, 1.0)
+AMW = pm.AcceleratorConfig.equal_area("amw", Dataflow.WS, 1.0)
+
+
+class TestScheduler:
+    def test_picks_perf_model_argmin_per_layer(self):
+        """The planned dataflow is exactly the gemm_cost argmin."""
+        for layer in (LayerGemm("fat_k", 64, 4096, 64),     # fat contraction
+                      LayerGemm("fat_c", 8192, 64, 64),     # fat rows
+                      LayerGemm("fc", 1, 2048, 1000)):
+            for acc in (HEANA, AMW):
+                plan = plan_layer(layer, acc, cache=PlanCache())
+                g = df.GemmShape(layer.c, layer.k, layer.d)
+                want = min(
+                    Dataflow,
+                    key=lambda f: (pm.gemm_cost(
+                        g, dataclasses.replace(acc, dataflow=f)).latency_s,
+                        pm.gemm_cost(
+                        g, dataclasses.replace(acc, dataflow=f)).energy.total,
+                        list(Dataflow).index(f)))
+                assert plan.dataflow == want, (layer.name, acc.backend)
+
+    def test_amw_fc_layer_prefers_input_stationary(self):
+        """Known shape: a C=1 GEMM on a thermo-optic backend holds the one
+        input row; IS ties WS on latency and wins the energy tie-break
+        (one DAC-held input row vs re-streaming inputs per column tile)."""
+        plan = plan_layer(LayerGemm("fc", 1, 2048, 1000), AMW,
+                          cache=PlanCache())
+        assert plan.dataflow == Dataflow.IS
+        assert plan.candidates["is"] <= plan.candidates["ws"]
+
+    def test_amw_batched_conv_prefers_weight_stationary(self):
+        """Fat-C conv on AMW amortizes the 4us thermo-optic weight hold."""
+        plan = plan_layer(LayerGemm("conv", 12544, 147, 64), AMW, batch=256,
+                          cache=PlanCache())
+        assert plan.dataflow == Dataflow.WS
+
+    @pytest.mark.parametrize("name", list(CNN_ZOO))
+    @pytest.mark.parametrize("batch", [1, 256])
+    def test_auto_plan_at_least_best_fixed(self, name, batch):
+        """Acceptance: auto-scheduled FPS >= best single fixed dataflow."""
+        layers = CNN_ZOO[name]()
+        for acc in (HEANA, AMW):
+            plan = schedule_cnn(layers, acc, batch, cache=PlanCache())
+            best = max(pm.cnn_inference(
+                layers, dataclasses.replace(acc, dataflow=f), batch).fps
+                for f in Dataflow)
+            assert plan.fps >= best * (1 - 1e-12), (name, acc.backend, batch)
+
+    def test_planned_totals_match_perf_model(self):
+        """CnnPlan.result is literally cnn_inference under the plan's flows."""
+        layers = CNN_ZOO["shufflenet_v2"]()
+        plan = schedule_cnn(layers, HEANA, 1, cache=PlanCache())
+        want = pm.cnn_inference(layers, HEANA, 1,
+                                dataflows=list(plan.dataflows))
+        assert plan.fps == want.fps
+        assert plan.latency_s == want.latency_s
+
+    def test_tile_choice_lane_aligned_and_covering(self):
+        for m, d, k in ((1, 10, 2048), (784, 128, 864), (12544, 64, 147)):
+            t = choose_tile(m, d, k, dpe_size=83)
+            assert t.block_m % 8 == 0 and t.block_d % 128 == 0
+            assert t.grid_m * t.block_m >= m
+            assert t.grid_d * t.block_d >= d
+            assert t.pad_waste >= 0.0
+
+
+class TestPlanCache:
+    def test_repeated_shapes_hit_within_one_cnn(self):
+        cache = PlanCache()
+        plan = schedule_cnn(CNN_ZOO["resnet50"](), HEANA, 1, cache=cache)
+        assert plan.cache_hits > 0          # bottleneck blocks repeat shapes
+        assert plan.cache_hits + plan.cache_misses == len(plan.layers)
+
+    def test_replan_is_all_hits_and_identical(self):
+        cache = PlanCache()
+        p1 = schedule_cnn(CNN_ZOO["googlenet"](), HEANA, 1, cache=cache)
+        p2 = schedule_cnn(CNN_ZOO["googlenet"](), HEANA, 1, cache=cache)
+        assert p2.cache_hits == len(p2.layers) and p2.cache_misses == 0
+        assert p1.dataflows == p2.dataflows
+        assert p1.fps == p2.fps
+
+    def test_key_sensitive_to_shape_config_objective(self):
+        cache = PlanCache()
+        base = plan_layer(LayerGemm("l", 64, 256, 64), HEANA, cache=cache)
+        other_shape = plan_layer(LayerGemm("l", 64, 256, 65), HEANA,
+                                 cache=cache)
+        other_acc = plan_layer(LayerGemm("l", 64, 256, 64), AMW, cache=cache)
+        other_obj = plan_layer(LayerGemm("l", 64, 256, 64), HEANA,
+                               objective="energy", cache=cache)
+        keys = {base.cache_key, other_shape.cache_key, other_acc.cache_key,
+                other_obj.cache_key}
+        assert len(keys) == 4
+        assert cache.stats()["hits"] == 0
+
+    def test_name_does_not_enter_the_key(self):
+        cache = PlanCache()
+        a = plan_layer(LayerGemm("alpha", 64, 256, 64), HEANA, cache=cache)
+        b = plan_layer(LayerGemm("beta", 64, 256, 64), HEANA, cache=cache)
+        assert a.cache_key == b.cache_key
+        assert b.cache_hit and not a.cache_hit
+        assert b.name == "beta"             # name re-attached on hit
+
+    def test_dump_load_roundtrip(self, tmp_path):
+        cache = PlanCache()
+        schedule_cnn(CNN_ZOO["mobilenet_v2"](), HEANA, 1, cache=cache)
+        path = str(tmp_path / "plans.json")
+        cache.dump(path)
+        fresh = PlanCache()
+        assert fresh.load(path) == len(cache)
+        plan = schedule_cnn(CNN_ZOO["mobilenet_v2"](), HEANA, 1, cache=fresh)
+        assert plan.cache_misses == 0
+
+
+class TestExecutor:
+    def _setup(self, noise=False, bits=6):
+        key = jax.random.PRNGKey(0)
+        params = build_small_cnn(key)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (3, 16, 16, 3))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=bits, dpe_size=83,
+                             noise_enabled=noise)
+        plan = plan_for_network(params, HEANA, batch=3, cache=PlanCache())
+        return params, x, cfg, plan
+
+    def test_pallas_execution_bit_exact_vs_oracle(self):
+        """Acceptance: end-to-end Pallas inference == jnp reference exactly
+        with noise disabled (bits=6 keeps every partial sum < 2^24)."""
+        params, x, cfg, plan = self._setup()
+        res = execute_cnn(params, x, plan, cfg, impl="pallas")
+        ref = reference_forward(params, x, cfg)
+        np.testing.assert_array_equal(np.asarray(res.logits),
+                                      np.asarray(ref))
+
+    def test_ref_impl_matches_models_own_forward(self):
+        """Executor lowering is faithful to small_cnn_apply itself."""
+        params, x, cfg, plan = self._setup()
+        res = execute_cnn(params, x, plan, cfg, impl="ref")
+        ref = reference_forward(params, x, cfg)
+        np.testing.assert_array_equal(np.asarray(res.logits),
+                                      np.asarray(ref))
+
+    def test_noise_keys_reproducible_per_layer(self):
+        params, x, cfg, plan = self._setup(noise=True)
+        r1 = execute_cnn(params, x, plan, cfg, key=jax.random.PRNGKey(5))
+        r2 = execute_cnn(params, x, plan, cfg, key=jax.random.PRNGKey(5))
+        r3 = execute_cnn(params, x, plan, cfg, key=jax.random.PRNGKey(6))
+        np.testing.assert_array_equal(np.asarray(r1.logits),
+                                      np.asarray(r2.logits))
+        assert not np.array_equal(np.asarray(r1.logits),
+                                  np.asarray(r3.logits))
+
+    def test_traces_carry_plan_and_numerics(self):
+        params, x, cfg, plan = self._setup()
+        res = execute_cnn(params, x, plan, cfg, impl="ref",
+                          collect_activations=True)
+        assert [t.name for t in res.traces] == ["conv1", "conv2", "conv3",
+                                                "fc"]
+        assert all(t.latency_s > 0 for t in res.traces)
+        assert len(res.activations) == 4
+        assert res.logits.shape == (3, 10)
+
+    def test_plan_lowering_mismatch_raises(self):
+        params, x, cfg, _ = self._setup()
+        bad = schedule_cnn([LayerGemm("only", 256, 27, 16)], HEANA,
+                           cache=PlanCache())
+        with pytest.raises(ValueError, match="lowering"):
+            execute_cnn(params, x, bad, cfg)
+
+    def test_batch_mismatch_raises(self):
+        params, x, cfg, plan = self._setup()       # plan at batch 3
+        x8 = jnp.concatenate([x, x, x[:2]], axis=0)
+        with pytest.raises(ValueError, match="batch"):
+            execute_cnn(params, x8, plan, cfg)
+
+    def test_lowered_gemms_rejects_wrong_in_hw(self):
+        params = build_small_cnn(jax.random.PRNGKey(0), in_hw=32)
+        with pytest.raises(ValueError, match="in_hw"):
+            cnn.lowered_gemms(params)              # default in_hw=16
+        gemms = cnn.lowered_gemms(params, in_hw=32)
+        assert gemms[0].c == 32 * 32
+
+    def test_lowered_gemms_match_forward_shapes(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        gemms = cnn.lowered_gemms(params)
+        assert [(g.name, g.c, g.k, g.d) for g in gemms] == [
+            ("conv1", 256, 27, 16), ("conv2", 64, 144, 32),
+            ("conv3", 16, 288, 32), ("fc", 1, 512, 10)]
+
+
+class TestReport:
+    def test_summary_and_table_render(self):
+        plan = schedule_cnn(CNN_ZOO["googlenet"](), HEANA, 1,
+                            cache=PlanCache())
+        s = plan_summary(plan, "googlenet")
+        assert s["n_layers"] == len(plan.layers)
+        assert sum(s["dataflow_mix"].values()) == len(plan.layers)
+        assert abs(s["fps"] - plan.fps) < 1e-9
+        table = plan_table(plan, max_rows=3)
+        assert table.count("\n") >= 4
+        fixed = {f: pm.cnn_inference(
+            CNN_ZOO["googlenet"](), dataclasses.replace(HEANA, dataflow=f)
+            ).fps for f in Dataflow}
+        cmp = plan_vs_fixed(plan, fixed)
+        assert cmp["uplift"] >= 1.0 - 1e-12
