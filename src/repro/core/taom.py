@@ -35,7 +35,12 @@ def quantize(x: jnp.ndarray, bits: int, axis=None, keepdims: bool = True,
     qmax = (1 << bits) - 1
     absmax = jnp.max(jnp.abs(x), axis=axis,
                      keepdims=(axis is not None) and keepdims)
-    scale = jnp.maximum(absmax, eps) / qmax
+    # Explicit reciprocal multiply, NOT division by the constant qmax: XLA
+    # rewrites x/const into x*(1/const) when jit-compiling whole programs
+    # but not op-by-op, so a division here would make jitted and eager
+    # forwards differ by 1 ULP in scale — enough to cross a downstream ADC
+    # rounding boundary and break the executor's bit-exactness contract.
+    scale = jnp.maximum(absmax, eps) * (1.0 / qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
     return q, scale
 

@@ -6,23 +6,32 @@ The three layers (see ISSUE 1 / paper §4, §6.3):
     event-driven perf model, with a content-addressed plan cache;
   * executor  — runs each planned GEMM through the Pallas TAOM kernel
     (quantize -> kernel -> rescale), batch folded into the GEMM M axis,
-    noise keys threaded per layer;
+    noise keys threaded per layer; the serving hot path is a jit-compiled
+    pure forward (compiled_forward / forward_fn) with the plan's tilings
+    baked in as static arguments and zero per-layer host syncs;
   * report    — modeled latency/energy aggregated next to executed
-    numerics, feeding benchmarks/autoflow.py and examples.
+    numerics, feeding benchmarks/autoflow.py, benchmarks/throughput.py
+    and examples.
 """
-from repro.exec.executor import (ExecutionResult, LayerTrace, execute_cnn,
-                                 plan_for_network, reference_forward)
+from repro.exec.executor import (ExecutionResult, LayerTrace,
+                                 compile_cache_stats, compiled_forward,
+                                 execute_cnn, forward_fn,
+                                 lowering_fingerprint, plan_for_network,
+                                 reference_forward, trace_count)
 from repro.exec.plan_cache import GLOBAL_PLAN_CACHE, PlanCache, fingerprint
 from repro.exec.report import (execution_summary, plan_summary, plan_table,
-                               plan_vs_fixed, render_report, save_summary)
-from repro.exec.scheduler import (CnnPlan, LayerPlan, TileChoice, plan_layer,
-                                  schedule_cnn)
+                               plan_vs_fixed, render_report, save_summary,
+                               throughput_summary)
+from repro.exec.scheduler import (CnnPlan, FrozenCandidates, LayerPlan,
+                                  TileChoice, plan_layer, schedule_cnn)
 
 __all__ = [
-    "CnnPlan", "LayerPlan", "TileChoice", "plan_layer", "schedule_cnn",
+    "CnnPlan", "FrozenCandidates", "LayerPlan", "TileChoice", "plan_layer",
+    "schedule_cnn",
     "PlanCache", "GLOBAL_PLAN_CACHE", "fingerprint",
     "ExecutionResult", "LayerTrace", "execute_cnn", "plan_for_network",
-    "reference_forward",
+    "reference_forward", "compiled_forward", "forward_fn", "trace_count",
+    "compile_cache_stats", "lowering_fingerprint",
     "plan_summary", "plan_table", "plan_vs_fixed", "execution_summary",
-    "render_report", "save_summary",
+    "render_report", "save_summary", "throughput_summary",
 ]

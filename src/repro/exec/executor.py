@@ -18,26 +18,50 @@ uses the plan's kernel tiling (block_m, block_d).  The plan's *dataflow*
 choice changes scheduling (latency/energy in the report), never numerics —
 with noise disabled the executed network equals the pure-jnp reference
 (kernels/ref.py) bit-exactly, whatever the plan says (tests pin this).
+
+Hot path (the serving contract HEANA's buffer-less pitch implies — the
+loop must never stall on the host):
+
+  * ``forward_fn`` is a pure jax.jit function of (params, x, key) with the
+    lowering, plan (tilings), cfg and impl baked in as *static* arguments;
+    one warm call = one cached executable, zero retracing, zero host syncs;
+  * per-layer numerics fingerprints (mean |activation|) are computed
+    on-device inside the compiled program and returned as ONE stacked
+    array; ``ExecutionResult.traces`` materializes them lazily, only when
+    a caller actually asks — never as per-layer ``float()`` syncs in the
+    loop;
+  * ``compiled_forward`` memoizes the jit wrapper under (lowering
+    fingerprint, plan cache keys, cfg, impl); jax.jit's own cache then
+    keys the executable on the batch shape/dtype — repeated serving calls
+    hit a traced executable;
+  * ``execute_cnn`` stays the thin eager-looking wrapper with today's
+    ExecutionResult API (``compiled=False`` opts back into the eager
+    op-by-op path, kept for the throughput benchmark's baseline).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import functools
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import PhotonicConfig
+from repro.exec import plan_cache as pc
 from repro.exec.scheduler import CnnPlan, LayerPlan
 from repro.kernels import ops
 from repro.models import cnn as cnn_mod
+
+_LOWERING_FP_VERSION = 1
 
 
 @dataclasses.dataclass
 class LayerTrace:
     """What actually ran for one layer (executed next to modeled)."""
     name: str
-    m: int
+    m: int                 # executed GEMM rows (batch folded in)
     k: int
     d: int
     dataflow: str
@@ -50,10 +74,32 @@ class LayerTrace:
 
 @dataclasses.dataclass
 class ExecutionResult:
+    """Logits + plan + lazily materialized per-layer traces.
+
+    ``fingerprints`` is the (n_layers,) device array of mean-|activation|
+    per layer, computed inside the compiled forward.  ``traces`` converts
+    it to floats on FIRST ACCESS — a serving loop that never reads traces
+    never syncs on them.
+    """
     logits: jnp.ndarray
     plan: CnnPlan
-    traces: List[LayerTrace]
+    fingerprints: jnp.ndarray
     activations: Optional[List[jnp.ndarray]] = None
+    _traces: Optional[List[LayerTrace]] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def traces(self) -> List[LayerTrace]:
+        if self._traces is None:
+            fp = [float(v) for v in jax.device_get(self.fingerprints)]
+            self._traces = [
+                LayerTrace(
+                    name=p.name, m=p.c, k=p.k, d=p.d,
+                    dataflow=p.dataflow.value, block_m=p.tile.block_m,
+                    block_d=p.tile.block_d, latency_s=p.latency_s,
+                    energy_j=p.energy_j, out_mean_abs=fp[i])
+                for i, p in enumerate(self.plan.layers)]
+        return self._traces
 
     @property
     def modeled_latency_s(self) -> float:
@@ -62,6 +108,11 @@ class ExecutionResult:
     @property
     def modeled_fps(self) -> float:
         return self.plan.fps
+
+    def block_until_ready(self) -> "ExecutionResult":
+        """Wait for the device computation (for timing/benchmarks)."""
+        self.logits.block_until_ready()
+        return self
 
 
 def _maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
@@ -77,86 +128,242 @@ def _layer_matmul(cols: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
                                block_d=plan.tile.block_d)
 
 
-def execute_cnn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
-                plan: CnnPlan, cfg: PhotonicConfig,
-                key: Optional[jax.Array] = None,
-                impl: str = "auto",
-                lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
-                collect_activations: bool = False) -> ExecutionResult:
-    """Run a lowered CNN end-to-end through the photonic kernel.
+# ---------------------------------------------------------------------------
+# Pure forward (the jit-compiled hot path)
+# ---------------------------------------------------------------------------
+# Counts Python executions of the forward body.  Under jit the body runs
+# only while TRACING, so a warm compiled call leaves the counter untouched
+# — tests and benchmarks/throughput.py assert no-retrace with this.
+_TRACE_COUNT = 0
 
-    params: weight dict keyed by LoweredLayer.name, each (K, D).
-    x: (N, H, W, C) image batch.
-    plan: CnnPlan over lowered_gemms(params, lowering) at batch >= 1 —
-      layer order must match the lowering (schedule_cnn preserves it).
-    key: root PRNG key for detection noise (per-layer keys are folded in);
-      None or cfg.noise_enabled=False runs deterministically.
-    impl: 'pallas' | 'ref' | 'auto' (forwarded to ops.photonic_matmul).
+
+def trace_count() -> int:
+    """How many times the forward body has been traced/executed in Python."""
+    return _TRACE_COUNT
+
+
+def _forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+             key: Optional[jax.Array] = None, *,
+             lowering: Tuple[cnn_mod.LoweredLayer, ...],
+             plan: CnnPlan, cfg: PhotonicConfig, impl: str,
+             collect_activations: bool):
+    """Pure forward: (params, x, key) -> (logits, fingerprints, acts).
+
+    Everything after the array arguments is static configuration; no host
+    sync happens anywhere in the body (fingerprints stay device arrays).
     """
-    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
-    if len(plan.layers) != len(lowering):
-        raise ValueError(
-            f"plan has {len(plan.layers)} layers, lowering has "
-            f"{len(lowering)} — plan the lowered_gemms of this network")
-    n = x.shape[0]
-    if n != plan.batch:
-        raise ValueError(
-            f"plan was scheduled for batch {plan.batch} but x has batch "
-            f"{n} — modeled and executed numbers would disagree")
-    traces: List[LayerTrace] = []
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+    n, h, w = x.shape[0], x.shape[1], x.shape[2]
+    fingerprints: List[jnp.ndarray] = []
     acts: List[jnp.ndarray] = []
-
     for idx, (lyr, lplan) in enumerate(zip(lowering, plan.layers)):
-        w = params[lyr.name]
+        wgt = params[lyr.name]
         layer_key = (jax.random.fold_in(key, idx)
                      if key is not None and cfg.noise_enabled else None)
         if lyr.kind == "conv":
-            hw = x.shape[1]
-            cols = cnn_mod._im2col(x, lyr.kk)           # (N, HW, K)
-            out = _layer_matmul(cols.reshape(-1, cols.shape[-1]), w, cfg,
+            cols = cnn_mod._im2col(x, lyr.kk)           # (N, H*W, K)
+            out = _layer_matmul(cols.reshape(-1, cols.shape[-1]), wgt, cfg,
                                 layer_key, lplan, impl)
-            x = out.reshape(n, hw, hw, w.shape[-1])
+            x = out.reshape(n, h, w, wgt.shape[-1])
         elif lyr.kind == "fc":
-            out = _layer_matmul(x.reshape(n, -1), w, cfg, layer_key, lplan,
-                                impl)
-            x = out
+            x = _layer_matmul(x.reshape(n, -1), wgt, cfg, layer_key, lplan,
+                              impl)
         else:
             raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
         if lyr.relu:
             x = jax.nn.relu(x)
         if lyr.pool_after:
             x = _maxpool2x2(x)
-        traces.append(LayerTrace(
-            name=lyr.name, m=out.shape[0] if out.ndim == 2 else -1,
-            k=w.shape[0], d=w.shape[1], dataflow=lplan.dataflow.value,
-            block_m=lplan.tile.block_m, block_d=lplan.tile.block_d,
-            latency_s=lplan.latency_s, energy_j=lplan.energy_j,
-            out_mean_abs=float(jnp.mean(jnp.abs(x)))))
+            h //= 2
+            w //= 2
+        # mean |activation| via explicit reciprocal multiply — jnp.mean's
+        # division by the (constant) element count is reassociated by XLA
+        # under jit but not eagerly, and the compiled-vs-eager contract
+        # covers the fingerprints too.
+        fingerprints.append(jnp.sum(jnp.abs(x)) * (1.0 / x.size))
         if collect_activations:
             acts.append(x)
+    return x, jnp.stack(fingerprints), tuple(acts)
 
-    return ExecutionResult(logits=x, plan=plan, traces=traces,
-                           activations=acts if collect_activations else None)
+
+forward_fn = jax.jit(_forward, static_argnames=(
+    "lowering", "plan", "cfg", "impl", "collect_activations"))
+"""jit entry point: ``forward_fn(params, x, key, lowering=..., plan=...,
+cfg=..., impl=..., collect_activations=...)`` with the keyword arguments
+static — CnnPlan/LayerPlan/TileChoice and PhotonicConfig are hashable by
+value precisely so they can sit in jit's cache key."""
+
+
+def lowering_fingerprint(
+        lowering: Sequence[cnn_mod.LoweredLayer]) -> str:
+    """Content address of a lowered network structure (not its weights)."""
+    return pc.fingerprint({
+        "v": _LOWERING_FP_VERSION,
+        "layers": [[l.name, l.kind, l.relu, l.pool_after, l.kk]
+                   for l in lowering],
+    })
+
+
+# Executable-wrapper memo: (lowering fp, per-layer plan cache keys, cfg,
+# impl, collect) -> partial over forward_fn.  jax.jit's own cache then
+# adds the batch shape/dtype — together that is the compilation cache
+# serving calls hit.  LRU-bounded for the same reason PlanCache is: a
+# long-lived serving process streaming distinct plans must not grow
+# without limit.  (Evicting a wrapper drops its pinned CnnPlan/lowering;
+# traced executables already in jit's global cache are NOT reclaimed —
+# call jax.clear_caches() if that ever matters.)
+_FORWARD_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_FORWARD_CACHE_MAX = 256
+
+
+def compiled_forward(plan: CnnPlan, cfg: PhotonicConfig,
+                     lowering: Optional[Sequence[cnn_mod.LoweredLayer]]
+                     = None,
+                     impl: str = "auto",
+                     collect_activations: bool = False) -> Callable:
+    """The compiled serving entry: returns ``fn(params, x, key=None)``.
+
+    Warm calls execute a cached jit executable — no retracing, no
+    per-layer host syncs.  Two plans that solve the same planning problems
+    (same content-addressed cache keys) share one wrapper even if they are
+    distinct objects.
+    """
+    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
+    impl = "pallas" if impl == "auto" else impl
+    memo_key = (lowering_fingerprint(lowering),
+                tuple(p.cache_key for p in plan.layers), cfg, impl,
+                collect_activations)
+    fn = _FORWARD_CACHE.get(memo_key)
+    if fn is None:
+        fn = functools.partial(forward_fn, lowering=lowering, plan=plan,
+                               cfg=cfg, impl=impl,
+                               collect_activations=collect_activations)
+        _FORWARD_CACHE[memo_key] = fn
+        while len(_FORWARD_CACHE) > _FORWARD_CACHE_MAX:
+            _FORWARD_CACHE.popitem(last=False)
+    else:
+        _FORWARD_CACHE.move_to_end(memo_key)
+    return fn
+
+
+def compile_cache_stats() -> dict:
+    return {"entries": len(_FORWARD_CACHE)}
+
+
+def clear_compile_cache() -> None:
+    _FORWARD_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Validation (eager, before tracing — clear errors instead of reshape noise)
+# ---------------------------------------------------------------------------
+def _validate(x: jnp.ndarray, plan: CnnPlan, cfg: PhotonicConfig,
+              lowering: Tuple[cnn_mod.LoweredLayer, ...],
+              key: Optional[jax.Array]) -> None:
+    if x.ndim != 4:
+        raise ValueError(f"x must be (N, H, W, C) images, got shape "
+                         f"{tuple(x.shape)}")
+    if len(plan.layers) != len(lowering):
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers, lowering has "
+            f"{len(lowering)} — plan the lowered_gemms of this network")
+    n, h, w = x.shape[0], x.shape[1], x.shape[2]
+    if n != plan.batch:
+        raise ValueError(
+            f"plan was scheduled for batch {plan.batch} but x has batch "
+            f"{n} — modeled and executed numbers would disagree")
+    if cfg.noise_enabled and key is None:
+        raise ValueError(
+            "cfg.noise_enabled=True but key=None — pass a root PRNG key "
+            "(per-layer keys are folded in) or set noise_enabled=False")
+    # Walk the lowering tracking (H, W) — rectangles are first-class, but
+    # the plan must have been built for THESE spatial dims, and 2x2
+    # pooling genuinely requires even dims.
+    for lyr, lplan in zip(lowering, plan.layers):
+        if lyr.kind == "conv" and lplan.c != plan.batch * h * w:
+            raise ValueError(
+                f"{lyr.name}: plan expects {lplan.c} GEMM rows but the "
+                f"input reaches this layer as {plan.batch} x {h}x{w} = "
+                f"{plan.batch * h * w} rows — plan_for_network(in_hw="
+                f"({x.shape[1]}, {x.shape[2]})) for this input size")
+        if lyr.pool_after:
+            if h % 2 or w % 2:
+                raise ValueError(
+                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
+                    f"got {h}x{w} — rectangular inputs are supported but "
+                    f"each pooled stage must divide by 2")
+            h //= 2
+            w //= 2
+
+
+# ---------------------------------------------------------------------------
+# Public wrapper (today's ExecutionResult API)
+# ---------------------------------------------------------------------------
+def execute_cnn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                plan: CnnPlan, cfg: PhotonicConfig,
+                key: Optional[jax.Array] = None,
+                impl: str = "auto",
+                lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
+                collect_activations: bool = False,
+                compiled: bool = True) -> ExecutionResult:
+    """Run a lowered CNN end-to-end through the photonic kernel.
+
+    params: weight dict keyed by LoweredLayer.name, each (K, D).
+    x: (N, H, W, C) image batch (H != W is fine; the plan must have been
+      built for the same spatial dims, see plan_for_network(in_hw=...)).
+    plan: CnnPlan over lowered_gemms(params, lowering) at batch >= 1 —
+      layer order must match the lowering (schedule_cnn preserves it).
+    key: root PRNG key for detection noise (per-layer keys are folded in);
+      REQUIRED when cfg.noise_enabled, forbidden-to-matter otherwise.
+    impl: 'pallas' | 'ref' | 'auto' (forwarded to ops.photonic_matmul).
+    compiled: route through the jit-compiled forward (default).  False
+      runs the same body op-by-op in Python — the slow pre-fix behavior,
+      kept as the measurable baseline for benchmarks/throughput.py.
+    """
+    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
+    impl = "pallas" if impl == "auto" else impl
+    _validate(x, plan, cfg, lowering, key)
+    if compiled:
+        fn = compiled_forward(plan, cfg, lowering, impl,
+                              collect_activations)
+        logits, fingerprints, acts = fn(params, x, key)
+    else:
+        logits, fingerprints, acts = _forward(
+            params, x, key, lowering=lowering, plan=plan, cfg=cfg,
+            impl=impl, collect_activations=collect_activations)
+    return ExecutionResult(
+        logits=logits, plan=plan, fingerprints=fingerprints,
+        activations=list(acts) if collect_activations else None)
 
 
 def reference_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
-                      cfg: PhotonicConfig) -> jnp.ndarray:
+                      cfg: PhotonicConfig,
+                      lowering: Optional[Sequence[cnn_mod.LoweredLayer]]
+                      = None) -> jnp.ndarray:
     """Pure-jnp oracle forward: same quantize->accumulate->ADC math via
-    kernels/ref.py, driven through the model's own apply function.
+    kernels/ref.py, driven through the SAME lowered structure the executor
+    runs (models.cnn.lowered_apply) — so the oracle covers any lowered
+    network, not just the small CNN.
 
     The bit-exactness contract (noise disabled): execute_cnn(...,
     impl='pallas') must equal this exactly — the Pallas path introduces
-    zero numeric deviation, padding included.
+    zero numeric deviation, padding included.  A noise-enabled cfg raises
+    (the oracle is deterministic by definition; disable noise explicitly).
     """
     mm: Callable = lambda a, w: ops.photonic_matmul(a, w, cfg, impl="ref")
-    return cnn_mod.small_cnn_apply(params, x, matmul=mm)
+    return cnn_mod.lowered_apply(params, x, lowering, matmul=mm)
 
 
 def plan_for_network(params: Dict[str, jnp.ndarray],
-                     acc, batch: int = 1, in_hw: int = 16,
+                     acc, batch: int = 1, in_hw=16,
                      lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
                      **schedule_kw) -> CnnPlan:
-    """Convenience: lower a runnable network's GEMM table and schedule it."""
+    """Convenience: lower a runnable network's GEMM table and schedule it.
+
+    ``in_hw``: input spatial size — an int for square images or an (H, W)
+    pair for rectangular ones.
+    """
     from repro.exec.scheduler import schedule_cnn
     gemms = cnn_mod.lowered_gemms(params, lowering, in_hw)
     return schedule_cnn(gemms, acc, batch=batch, **schedule_kw)

@@ -94,6 +94,30 @@ def execution_summary(res: ExecutionResult, name: str = "",
     return out
 
 
+def throughput_summary(name: str, batch: int, compiled_ips: float,
+                       eager_ips: float, modeled_fps: float,
+                       extras: Optional[dict] = None) -> dict:
+    """JSON-safe record of one compiled-vs-eager throughput measurement.
+
+    ``*_ips`` are measured warm-call images/sec on the host simulation;
+    ``modeled_fps`` is the photonic perf-model number for context (the
+    two are different machines — never compare them directly).
+    """
+    out = {
+        "kind": "throughput",
+        "name": name,
+        "batch": batch,
+        "compiled_ips": compiled_ips,
+        "eager_ips": eager_ips,
+        "speedup": (compiled_ips / eager_ips) if eager_ips > 0
+        else float("inf"),
+        "modeled_fps": modeled_fps,
+    }
+    if extras:
+        out.update(extras)
+    return out
+
+
 def render_report(summaries: Iterable[dict]) -> str:
     """Markdown table over plan summaries (one row per CNN/config)."""
     lines = [

@@ -23,6 +23,14 @@ is purely a performance knob.
 Plans are cached content-addressed (exec.plan_cache): repeated shapes and
 configs — within one CNN, across CNNs, or across processes via
 dump()/load() — skip the search entirely.
+
+Hashability: TileChoice, LayerPlan and CnnPlan are hashable by value so
+they can serve as *static* arguments to jax.jit — the executor's compiled
+forward (exec.executor.forward_fn) bakes the plan's tilings into the
+traced program, and jit's own cache keys on the plan.  LayerPlan freezes
+its ``candidates`` mapping at construction; CnnPlan hashes on what
+determines it (layers, accelerator, batch, objective) and excludes the
+derived perf-model ``result``.
 """
 from __future__ import annotations
 
@@ -40,9 +48,39 @@ from repro.kernels.taom_gemm import SUBLANE as _SUBLANE
 from repro.kernels.taom_gemm import _round_up
 from repro.models.cnn import LayerGemm
 
-_BLOCK_M_CANDIDATES = (8, 16, 32, 64, 128, 256)
+# Large-M tiles matter for executor throughput: the kernel's grid loop is
+# serialized over M/block_m steps, so a batch-256 conv (M = 65536 rows)
+# at block_m=256 pays 256 grid steps where block_m=4096 pays 16 — ~10x
+# wall-clock on the serving hot path.  Padding waste still dominates the
+# choice, so small layers keep small tiles; an (8, 4096) f32 block stays
+# comfortably inside TPU VMEM budgets.
+_BLOCK_M_CANDIDATES = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 _BLOCK_D_CANDIDATES = (128, 256)
-_PLAN_VERSION = 1
+_PLAN_VERSION = 2
+
+
+class FrozenCandidates(dict):
+    """Immutable, hashable dataflow -> modeled-latency mapping.
+
+    A dict subclass so it stays JSON-serializable and keeps the plain
+    ``plan.candidates["is"]`` read API, but with mutation blocked and a
+    content hash — which is what lets LayerPlan (and through it CnnPlan)
+    be a static jax.jit argument.
+    """
+
+    def __hash__(self) -> int:                       # type: ignore[override]
+        return hash(tuple(sorted(self.items())))
+
+    def _immutable(self, *args, **kw):
+        raise TypeError("FrozenCandidates is immutable")
+
+    __setitem__ = __delitem__ = _immutable
+    clear = pop = popitem = setdefault = update = _immutable
+
+    def __reduce__(self):
+        # deepcopy/pickle rebuild through __init__ (C-level dict fill),
+        # not item assignment, which is blocked.
+        return (FrozenCandidates, (dict(self),))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,16 +109,31 @@ class LayerPlan:
                                    # instance) for report/debugging
     tile: TileChoice
     cache_key: str
-    cache_hit: bool
+    # Run bookkeeping, not plan content: a plan served from the cache must
+    # compare (and jit-cache) equal to the freshly searched one.
+    cache_hit: bool = dataclasses.field(compare=False)
+
+    def __post_init__(self):
+        # Freeze the candidates mapping so the (frozen) dataclass hash —
+        # required for static-jit use — is well defined.
+        object.__setattr__(self, "candidates",
+                           FrozenCandidates(self.candidates))
 
     @property
     def gemm(self) -> df.GemmShape:
         return df.GemmShape(self.c, self.k, self.d)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class CnnPlan:
-    """A whole CNN's auto-scheduled execution plan."""
+    """A whole CNN's auto-scheduled execution plan.
+
+    Hash/equality cover what *determines* the plan (layers, accelerator,
+    batch, objective) — ``result`` is derived from those through the perf
+    model and ``cache_hits``/``cache_misses`` are run bookkeeping, so two
+    plans of the same problem compare equal (and hit the same jit trace)
+    whether they came from the search or the plan cache.
+    """
     layers: Tuple[LayerPlan, ...]
     acc: pm.AcceleratorConfig
     batch: int
@@ -88,6 +141,17 @@ class CnnPlan:
     result: pm.InferenceResult     # perf-model totals under the plan
     cache_hits: int
     cache_misses: int
+
+    def _identity(self) -> tuple:
+        return (self.layers, self.acc, self.batch, self.objective)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, CnnPlan):
+            return NotImplemented
+        return self._identity() == other._identity()
+
+    def __hash__(self) -> int:
+        return hash(self._identity())
 
     @property
     def dataflows(self) -> Tuple[Dataflow, ...]:

@@ -44,7 +44,16 @@ def _taom_forward(x2d: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
             interpret=_on_cpu())
     else:
         acc = ref_mod.taom_gemm_reference(xq, wq, noise, cfg, adc_fs)
-    return (acc * (sx * sw)).astype(x2d.dtype)
+    # Pin the rescale against XLA's algebraic simplifier: under
+    # whole-program jit it reassociates this multiply chain with the ADC's
+    # trailing *step (a splat constant) and with the quantize-scale chain,
+    # shifting results by 1 ULP vs the op-by-op eager path — which then
+    # crosses ADC rounding boundaries in later layers.  The barriers make
+    # the compiled forward bit-identical to eager execution (the
+    # executor's compiled-vs-eager contract; free at runtime).
+    acc, sx, sw = jax.lax.optimization_barrier((acc, sx, sw))
+    out = (acc * (sx * sw)).astype(x2d.dtype)
+    return jax.lax.optimization_barrier(out)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -79,9 +88,29 @@ def photonic_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
     adc_fs: calibrated PGA full scale; default = analytic calibration.
     block_m/block_d: kernel output-tile sizes (a LayerPlan's tiling choice
     from repro.exec.scheduler plugs in here; numerics are tile-invariant).
+
+    jit-friendly: every branch here is on static config (cfg, impl, key
+    being None), so the whole call traces into one compiled program —
+    repro.exec.executor.forward_fn wraps an entire CNN of these in a
+    single jax.jit.
+
+    Noise contract: ``cfg.noise_enabled=True`` REQUIRES a PRNG key.  The
+    old behavior (silently running noiseless when key=None) handed a user
+    expecting noisy inference deterministic results with no signal that
+    anything was off; now that combination raises — disable noise
+    explicitly (cfg.noise_enabled=False) to run deterministically.  The
+    EXACT backend is exempt: it bypasses the photonic pipeline entirely
+    (no detectors exist to be noisy), so ``noise_enabled`` does not apply.
     """
     if cfg.backend == Backend.EXACT:
         return x @ w
+    if cfg.noise_enabled and key is None:
+        raise ValueError(
+            "photonic_matmul: cfg.noise_enabled=True but key=None — "
+            "detection noise needs a PRNG key.  Pass key=jax.random."
+            "PRNGKey(...) for noisy inference, or set "
+            "noise_enabled=False to run deterministically (the old "
+            "behavior silently did the latter).")
     if impl == "auto":
         impl = "pallas"
     if adc_fs is None:

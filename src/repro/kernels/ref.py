@@ -12,10 +12,13 @@ import math
 
 import jax.numpy as jnp
 
-from repro.core.bpca import adc_readout
 from repro.core.photonic_gemm import detection_sigma
 from repro.core.types import Backend, PhotonicConfig
-from repro.kernels.taom_gemm import chunk_fs
+# The ADC model is shared with the kernel, python-float full scale and
+# all: both sides compute the same host-side step/reciprocal constants, so
+# the oracle cannot diverge from the kernel by a compile-mode ULP (see
+# adc_round's docstring).
+from repro.kernels.taom_gemm import adc_round, chunk_fs
 
 
 def taom_gemm_reference(xq: jnp.ndarray, wq: jnp.ndarray,
@@ -41,12 +44,12 @@ def taom_gemm_reference(xq: jnp.ndarray, wq: jnp.ndarray,
     if cfg.backend in (Backend.AMW, Backend.MAW):
         assert noise.shape == (n_chunks, m, d)
         noisy = psums + sigma * noise
-        quant = adc_readout(noisy, cfg.adc_bits, jnp.float32(chunk_fs(cfg)))
+        quant = adc_round(noisy, cfg.adc_bits, chunk_fs(cfg))
         return jnp.sum(quant, axis=0)
     assert noise.shape == (m, d)
     acc = jnp.sum(psums, axis=0)
     acc = acc + sigma * math.sqrt(float(n_chunks)) * noise
-    return adc_readout(acc, cfg.adc_bits, jnp.float32(adc_fs))
+    return adc_round(acc, cfg.adc_bits, float(adc_fs))
 
 
 def ssd_scan_reference(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,

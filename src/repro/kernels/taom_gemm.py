@@ -47,11 +47,24 @@ def _round_up(x: int, m: int) -> int:
 
 
 def adc_round(v: jnp.ndarray, adc_bits: int, full_scale: float) -> jnp.ndarray:
-    """Uniform mid-tread ADC over [-fs, fs] — mirrors core.bpca.adc_readout."""
+    """Uniform mid-tread ADC over [-fs, fs] — mirrors core.bpca.adc_readout.
+
+    ``full_scale`` is a PYTHON float (the calibrated PGA setting), so both
+    ``step`` and its reciprocal are computed host-side in double precision
+    and enter the traced program as multiply-by-constant only.  A traced
+    ``v / step`` would be rewritten to a reciprocal multiply by XLA under
+    whole-program jit but not eagerly, making compiled and eager forwards
+    disagree by 1 ULP right at ADC rounding boundaries — this formulation
+    is bit-identical under both, and kernels/ref.py shares this exact
+    function so kernel and oracle cannot diverge either.
+    """
     levels = (1 << adc_bits) - 1
-    step = 2.0 * full_scale / levels
+    # Same degenerate-input floor as core.bpca.adc_readout: a zero/negative
+    # programmed full scale clamps instead of dividing by zero.
+    step = 2.0 * max(float(full_scale), 1e-12) / levels
+    inv_step = 1.0 / step
     hi = levels // 2 + levels % 2
-    return jnp.clip(jnp.round(v / step), -hi, hi) * step
+    return jnp.clip(jnp.round(v * inv_step), -hi, hi) * step
 
 
 def calibrated_adc_fs(k: int, cfg: PhotonicConfig) -> float:

@@ -206,22 +206,32 @@ def small_cnn_lowering() -> tuple:
     )
 
 
-def lowered_gemms(params: dict, lowering=None, in_hw: int = 16
-                  ) -> List[LayerGemm]:
+def _spatial_dims(in_hw) -> tuple:
+    """Normalize a spatial-size spec: int -> square, (H, W) -> as given."""
+    if isinstance(in_hw, (tuple, list)):
+        h, w = in_hw
+        return int(h), int(w)
+    return int(in_hw), int(in_hw)
+
+
+def lowered_gemms(params: dict, lowering=None, in_hw=16) -> List[LayerGemm]:
     """Analytic GEMM table (for the scheduler) of a lowered runnable CNN.
 
     Walks the lowering, tracking the spatial size through the pools, and
     reads K/D off the actual weight shapes — the same (C, K, D) the
     executor will feed the kernel, so plans and execution agree.
+
+    ``in_hw`` is the input spatial size: an int for square images or an
+    (H, W) pair for rectangular ones (conv rows become H*W).
     """
     lowering = lowering or small_cnn_lowering()
-    hw = in_hw
+    h, w = _spatial_dims(in_hw)
     out = []
     prev_d = None
     for lyr in lowering:
         k, d = params[lyr.name].shape
         if lyr.kind == "conv":
-            c = hw * hw
+            c = h * w
             if prev_d is not None and k != prev_d * lyr.kk * lyr.kk:
                 raise ValueError(
                     f"{lyr.name}: weight K={k} but expected "
@@ -229,15 +239,20 @@ def lowered_gemms(params: dict, lowering=None, in_hw: int = 16
                     f"previous layer's channels")
         else:
             c = 1
-            if prev_d is not None and k != hw * hw * prev_d:
+            if prev_d is not None and k != h * w * prev_d:
                 raise ValueError(
                     f"{lyr.name}: weight K={k} but the tracked feature map "
-                    f"is {hw}x{hw}x{prev_d}={hw * hw * prev_d} — in_hw "
+                    f"is {h}x{w}x{prev_d}={h * w * prev_d} — in_hw "
                     f"does not match these params")
         out.append(LayerGemm(lyr.name, c, k, d))
         prev_d = d
         if lyr.pool_after:
-            hw //= 2
+            if h % 2 or w % 2:
+                raise ValueError(
+                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
+                    f"got {h}x{w} — pad the input or drop pool_after")
+            h //= 2
+            w //= 2
     return out
 
 
@@ -271,26 +286,50 @@ def _im2col(x: jnp.ndarray, kk: int = 3) -> jnp.ndarray:
     return jnp.concatenate(patches, axis=-1).reshape(n, h * w, c * kk * kk)
 
 
+def lowered_apply(params: dict, x: jnp.ndarray, lowering=None,
+                  matmul: Optional[Callable] = None) -> jnp.ndarray:
+    """Forward pass of ANY lowered runnable CNN, driven by its lowering.
+
+    The single source of truth for what a LoweredLayer sequence computes:
+    the executor (repro.exec.executor) replays exactly this structure
+    through the Pallas kernel, and the bit-exactness oracle
+    (exec.executor.reference_forward) calls this with the *same* lowering
+    the executor ran — so the contract covers every lowered network, not
+    just the small CNN.
+
+    ``matmul(a, w)`` defaults to exact and can be the photonic simulation
+    (ops.photonic_matmul partial).  Tracks (H, W) independently, so
+    rectangular images are first-class.
+    """
+    lowering = tuple(lowering or small_cnn_lowering())
+    mm = matmul or (lambda a, w: a @ w)
+    n, h, w, _ = x.shape
+    for lyr in lowering:
+        wgt = params[lyr.name]
+        if lyr.kind == "conv":
+            cols = _im2col(x, lyr.kk)              # (N, H*W, K)
+            out = mm(cols.reshape(-1, cols.shape[-1]), wgt)
+            x = out.reshape(n, h, w, wgt.shape[-1])
+        elif lyr.kind == "fc":
+            x = mm(x.reshape(n, -1), wgt)
+        else:
+            raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
+        if lyr.relu:
+            x = jax.nn.relu(x)
+        if lyr.pool_after:
+            if h % 2 or w % 2:
+                raise ValueError(
+                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
+                    f"got {h}x{w}")
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            h //= 2
+            w //= 2
+    return x
+
+
 def small_cnn_apply(params: dict, x: jnp.ndarray,
                     matmul: Optional[Callable] = None) -> jnp.ndarray:
-    """Forward pass; ``matmul(a, w)`` defaults to exact and can be the
-    photonic simulation (ops.photonic_matmul partial)."""
-    mm = matmul or (lambda a, w: a @ w)
-    n, h, w_, c = x.shape
-
-    def conv(x, wname, kk=3):
-        nh = x.shape[1]
-        cols = _im2col(x, kk)                      # (N, HW, K)
-        out = mm(cols.reshape(-1, cols.shape[-1]), params[wname])
-        ch = params[wname].shape[-1]
-        return jax.nn.relu(out.reshape(n, nh, nh, ch))
-
-    x = conv(x, "conv1")
-    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                              (1, 2, 2, 1), "VALID")
-    x = conv(x, "conv2")
-    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                              (1, 2, 2, 1), "VALID")
-    x = conv(x, "conv3")
-    x = x.reshape(n, -1)
-    return mm(x, params["fc"])
+    """Forward pass of the small CNN; delegates to ``lowered_apply`` with
+    its own lowering so forward and lowering cannot drift."""
+    return lowered_apply(params, x, small_cnn_lowering(), matmul)

@@ -1,6 +1,9 @@
 """Execution-engine tests: scheduler optimality, plan cache, executor
-parity with the pure-jnp oracle (paper §4/§6.3 — flexible dataflows)."""
+parity with the pure-jnp oracle (paper §4/§6.3 — flexible dataflows),
+and the jit-compiled serving hot path (ISSUE 2): compiled == eager
+bitwise, zero retraces on warm calls, lazy trace materialization."""
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -10,12 +13,15 @@ import pytest
 from repro.core import dataflow as df
 from repro.core import perf_model as pm
 from repro.core.types import Backend, Dataflow, PhotonicConfig
-from repro.exec import (PlanCache, execute_cnn, plan_for_network, plan_layer,
-                        plan_summary, plan_table, plan_vs_fixed,
-                        reference_forward, schedule_cnn)
+from repro.exec import (PlanCache, compiled_forward, execute_cnn,
+                        plan_for_network, plan_layer, plan_summary,
+                        plan_table, plan_vs_fixed, reference_forward,
+                        schedule_cnn, trace_count)
 from repro.exec.scheduler import choose_tile
+from repro.kernels import ops
 from repro.models import cnn
-from repro.models.cnn import CNN_ZOO, LayerGemm, build_small_cnn
+from repro.models.cnn import (CNN_ZOO, LayerGemm, LoweredLayer,
+                              build_small_cnn)
 
 HEANA = pm.AcceleratorConfig.equal_area("heana", Dataflow.OS, 1.0)
 AMW = pm.AcceleratorConfig.equal_area("amw", Dataflow.WS, 1.0)
@@ -204,6 +210,369 @@ class TestExecutor:
         assert [(g.name, g.c, g.k, g.d) for g in gemms] == [
             ("conv1", 256, 27, 16), ("conv2", 64, 144, 32),
             ("conv3", 16, 288, 32), ("fc", 1, 512, 10)]
+
+
+def _custom_lowering():
+    """A runnable network that is NOT the small CNN: two convs (one 5x5),
+    one pool, fc — exercises the lowering-driven oracle (ISSUE 2 satellite:
+    reference_forward used to hardcode small_cnn_apply)."""
+    return (
+        LoweredLayer("ca", "conv", relu=True, pool_after=True, kk=3),
+        LoweredLayer("cb", "conv", relu=True, pool_after=False, kk=5),
+        LoweredLayer("out", "fc", relu=False, pool_after=False),
+    )
+
+
+def _custom_params(key, in_hw=8, in_ch=2):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mk = lambda k, shape: jax.random.normal(k, shape, jnp.float32) \
+        / jnp.sqrt(shape[0])
+    return {
+        "ca": mk(k1, (in_ch * 9, 8)),
+        "cb": mk(k2, (8 * 25, 12)),
+        "out": mk(k3, ((in_hw // 2) ** 2 * 12, 5)),
+    }
+
+
+class TestCompiledForward:
+    """The serving hot path: jit-compiled forward == eager, no retraces."""
+
+    def _setup(self, batch=3, noise=False, bits=6):
+        key = jax.random.PRNGKey(0)
+        params = build_small_cnn(key)
+        x = jax.random.normal(jax.random.fold_in(key, 1),
+                              (batch, 16, 16, 3))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=bits, dpe_size=83,
+                             noise_enabled=noise)
+        plan = plan_for_network(params, HEANA, batch=batch,
+                                cache=PlanCache())
+        return params, x, cfg, plan
+
+    @pytest.mark.parametrize("noise", [False, True])
+    @pytest.mark.parametrize("batch", [1, 3])
+    def test_compiled_bit_exact_vs_eager_pallas(self, noise, batch):
+        """Acceptance: the compiled forward is bit-exact vs the eager
+        op-by-op path, noise on and off."""
+        params, x, cfg, plan = self._setup(batch=batch, noise=noise)
+        key = jax.random.PRNGKey(11) if noise else None
+        c = execute_cnn(params, x, plan, cfg, key=key, impl="pallas")
+        e = execute_cnn(params, x, plan, cfg, key=key, impl="pallas",
+                        compiled=False)
+        np.testing.assert_array_equal(np.asarray(c.logits),
+                                      np.asarray(e.logits))
+        # fingerprints are diagnostics: same program, but reduction order
+        # may differ between fused/eager reduces — tight tolerance only
+        np.testing.assert_allclose(np.asarray(c.fingerprints),
+                                   np.asarray(e.fingerprints), rtol=1e-6)
+
+    @pytest.mark.parametrize("noise", [False, True])
+    def test_compiled_bit_exact_vs_eager_batch256(self, noise):
+        """Acceptance at the serving batch (256) — ref impl keeps the
+        eager baseline affordable in CI (benchmarks/throughput.py covers
+        the Pallas impl at 256); tilings come from the batch-256 plan."""
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(2), (256, 16, 16, 3))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                             noise_enabled=noise)
+        plan = plan_for_network(params, HEANA, batch=256,
+                                cache=PlanCache())
+        key = jax.random.PRNGKey(11) if noise else None
+        c = execute_cnn(params, x, plan, cfg, key=key, impl="ref")
+        e = execute_cnn(params, x, plan, cfg, key=key, impl="ref",
+                        compiled=False)
+        np.testing.assert_array_equal(np.asarray(c.logits),
+                                      np.asarray(e.logits))
+
+    def test_no_retrace_on_repeated_calls(self):
+        """Acceptance: warm compiled calls never re-trace (the pre-fix
+        executor re-traced every inference)."""
+        params, x, cfg, plan = self._setup()
+        execute_cnn(params, x, plan, cfg)           # cold: traces once
+        before = trace_count()
+        for _ in range(3):
+            execute_cnn(params, x, plan, cfg)
+        assert trace_count() == before
+        # a replanned (equal) plan must hit the same executable
+        plan2 = plan_for_network(params, HEANA, batch=3, cache=PlanCache())
+        execute_cnn(params, x, plan2, cfg)
+        assert trace_count() == before
+
+    def test_new_batch_shape_traces_once(self):
+        params, x, cfg, plan = self._setup()
+        execute_cnn(params, x, plan, cfg)
+        before = trace_count()
+        plan8 = plan_for_network(params, HEANA, batch=8, cache=PlanCache())
+        x8 = jax.random.normal(jax.random.PRNGKey(3), (8, 16, 16, 3))
+        execute_cnn(params, x8, plan8, cfg)
+        assert trace_count() == before + 1          # one new shape: 1 trace
+        execute_cnn(params, x8, plan8, cfg)
+        assert trace_count() == before + 1
+
+    def test_eager_path_runs_python_body_every_call(self):
+        params, x, cfg, plan = self._setup()
+        before = trace_count()
+        execute_cnn(params, x, plan, cfg, compiled=False)
+        execute_cnn(params, x, plan, cfg, compiled=False)
+        assert trace_count() == before + 2
+
+    def test_compiled_forward_memo_shares_wrapper(self):
+        """Equal planning problems (distinct plan objects) share one
+        compiled wrapper (content-addressed memo)."""
+        params, x, cfg, plan = self._setup()
+        plan2 = plan_for_network(params, HEANA, batch=3, cache=PlanCache())
+        assert plan is not plan2
+        assert compiled_forward(plan, cfg) is compiled_forward(plan2, cfg)
+
+    def test_compiled_forward_memo_is_bounded(self):
+        """The wrapper memo is LRU-bounded (serving processes must not
+        grow without limit)."""
+        from repro.exec import executor as ex
+        params, _, cfg, plan = self._setup()
+        compiled_forward(plan, cfg)
+        assert len(ex._FORWARD_CACHE) <= ex._FORWARD_CACHE_MAX
+
+    def test_plans_are_hashable_and_value_equal(self):
+        """CnnPlan/LayerPlan/TileChoice serve as static jit args."""
+        params, _, _, plan = self._setup()
+        plan2 = plan_for_network(params, HEANA, batch=3, cache=PlanCache())
+        assert hash(plan) == hash(plan2) and plan == plan2
+        assert hash(plan.layers[0]) == hash(plan2.layers[0])
+        assert hash(plan.layers[0].tile) == hash(plan2.layers[0].tile)
+        other = plan_for_network(params, HEANA, batch=4, cache=PlanCache())
+        assert plan != other
+        with pytest.raises(TypeError, match="immutable"):
+            plan.layers[0].candidates["os"] = 0.0
+
+    def test_traces_materialize_lazily(self):
+        params, x, cfg, plan = self._setup()
+        res = execute_cnn(params, x, plan, cfg)
+        assert res._traces is None                  # nothing synced yet
+        assert res.fingerprints.shape == (len(plan.layers),)
+        traces = res.traces                         # first access builds
+        assert res._traces is traces
+        assert [t.name for t in traces] == ["conv1", "conv2", "conv3", "fc"]
+        assert all(t.out_mean_abs > 0 for t in traces)
+
+    def test_fc_trace_m_is_batch_rows_not_placeholder(self):
+        """Satellite fix: fc layers used to trace m=-1."""
+        params, x, cfg, plan = self._setup(batch=3)
+        res = execute_cnn(params, x, plan, cfg)
+        fc = res.traces[-1]
+        assert fc.name == "fc" and fc.m == 3        # batch folded into M
+        assert all(t.m > 0 for t in res.traces)
+
+
+class TestOracleLowering:
+    """reference_forward drives the SAME lowering the executor runs."""
+
+    def _setup(self, noise=False):
+        key = jax.random.PRNGKey(4)
+        lowering = _custom_lowering()
+        params = _custom_params(key)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 2))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                             noise_enabled=noise)
+        plan = plan_for_network(params, HEANA, batch=2, in_hw=8,
+                                lowering=lowering, cache=PlanCache())
+        return params, x, cfg, plan, lowering
+
+    @pytest.mark.parametrize("impl", ["ref", "pallas"])
+    def test_executor_matches_oracle_on_non_small_lowering(self, impl):
+        params, x, cfg, plan, lowering = self._setup()
+        res = execute_cnn(params, x, plan, cfg, impl=impl,
+                          lowering=lowering)
+        ref = reference_forward(params, x, cfg, lowering=lowering)
+        np.testing.assert_array_equal(np.asarray(res.logits),
+                                      np.asarray(ref))
+        assert res.logits.shape == (2, 5)
+
+    def test_oracle_differs_from_small_cnn_apply(self):
+        """Guard against the old bug: the oracle is NOT the small CNN."""
+        params, x, cfg, _, lowering = self._setup()
+        ref = reference_forward(params, x, cfg, lowering=lowering)
+        with pytest.raises(Exception):
+            # driving these params through the small-CNN structure is a
+            # shape error — exactly what the hardcoded oracle used to hide
+            cnn.small_cnn_apply(params, x)
+        assert ref.shape == (2, 5)
+
+
+class TestRectangularInputs:
+    """The executor used to assume H == W (hw = x.shape[1])."""
+
+    def _setup(self, h=16, w=8):
+        key = jax.random.PRNGKey(5)
+        # small-CNN convs are spatial-size agnostic; swap in a
+        # rect-compatible fc ((h//4)*(w//4)*32 inputs after two pools)
+        params = dict(build_small_cnn(key))
+        params["fc"] = jax.random.normal(jax.random.fold_in(key, 9),
+                                         ((h // 4) * (w // 4) * 32, 10),
+                                         jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, h, w, 3))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                             noise_enabled=False)
+        return params, x, cfg
+
+    def test_rectangular_input_matches_oracle(self):
+        params, x, cfg = self._setup()
+        plan = plan_for_network(params, HEANA, batch=2, in_hw=(16, 8),
+                                cache=PlanCache())
+        res = execute_cnn(params, x, plan, cfg, impl="ref")
+        ref = reference_forward(params, x, cfg)
+        np.testing.assert_array_equal(np.asarray(res.logits),
+                                      np.asarray(ref))
+        assert res.logits.shape == (2, 10)
+
+    def test_square_plan_on_rect_input_raises_clearly(self):
+        params, x, cfg = self._setup()
+        square = plan_for_network(build_small_cnn(jax.random.PRNGKey(5)),
+                                  HEANA, batch=2, cache=PlanCache())
+        with pytest.raises(ValueError, match="rows"):
+            execute_cnn(params, x, square, cfg)
+
+    def test_odd_spatial_dim_pooling_raises(self):
+        params, x, cfg = self._setup()
+        with pytest.raises(ValueError, match="even spatial"):
+            cnn.lowered_gemms(params, in_hw=(15, 8))
+        plan = plan_for_network(params, HEANA, batch=2, in_hw=(16, 8),
+                                cache=PlanCache())
+        x_odd = jax.random.normal(jax.random.PRNGKey(2), (2, 15, 8, 3))
+        with pytest.raises(ValueError, match="even spatial|rows"):
+            execute_cnn(params, x_odd, plan, cfg)
+
+    def test_non_image_input_raises(self):
+        params, x, cfg = self._setup()
+        plan = plan_for_network(params, HEANA, batch=2, in_hw=(16, 8),
+                                cache=PlanCache())
+        with pytest.raises(ValueError, match="images"):
+            execute_cnn(params, x.reshape(2, -1), plan, cfg)
+
+
+class TestPlanCacheHardening:
+    """Atomic dump, tolerant load, LRU bound (serving-deployment fixes)."""
+
+    def test_corrupt_file_loads_zero_not_raises(self, tmp_path):
+        path = tmp_path / "plans.json"
+        path.write_text('{"truncated": ')           # crash-mid-write relic
+        cache = PlanCache()
+        with pytest.warns(RuntimeWarning, match="unreadable"):
+            assert cache.load(str(path)) == 0
+        assert len(cache) == 0
+        # cache still fully usable afterwards
+        plan = schedule_cnn(CNN_ZOO["shufflenet_v2"](), HEANA, 1,
+                            cache=cache)
+        assert plan.cache_misses > 0
+
+    def test_malformed_entries_skipped_valid_merged(self, tmp_path):
+        cache = PlanCache()
+        schedule_cnn(CNN_ZOO["mobilenet_v2"](), HEANA, 1, cache=cache)
+        path = str(tmp_path / "plans.json")
+        cache.dump(path)
+        blob = json.load(open(path))
+        n_valid = len(blob)
+        blob["bad-entry"] = {"not": "a plan"}
+        blob["worse"] = 17
+        json.dump(blob, open(path, "w"))
+        fresh = PlanCache()
+        with pytest.warns(RuntimeWarning, match="malformed"):
+            assert fresh.load(path) == n_valid
+        plan = schedule_cnn(CNN_ZOO["mobilenet_v2"](), HEANA, 1,
+                            cache=fresh)
+        assert plan.cache_misses == 0
+
+    def test_dump_replaces_atomically_no_temp_left(self, tmp_path):
+        cache = PlanCache()
+        schedule_cnn(CNN_ZOO["shufflenet_v2"](), HEANA, 1, cache=cache)
+        path = tmp_path / "plans.json"
+        path.write_text('{"stale": true}')
+        cache.dump(str(path))
+        assert json.load(open(path)) != {"stale": True}
+        leftovers = [p for p in tmp_path.iterdir() if p.name != path.name]
+        assert leftovers == []
+
+    def test_non_dict_json_loads_zero(self, tmp_path):
+        path = tmp_path / "plans.json"
+        path.write_text('[1, 2, 3]')
+        with pytest.warns(RuntimeWarning, match="not a JSON object"):
+            assert PlanCache().load(str(path)) == 0
+
+    def test_lru_bound_evicts_oldest(self):
+        cache = PlanCache(max_entries=2)
+        a = plan_layer(LayerGemm("a", 64, 256, 64), HEANA, cache=cache)
+        plan_layer(LayerGemm("b", 64, 256, 65), HEANA, cache=cache)
+        # touch a so b is the LRU entry
+        assert cache.get(a.cache_key) is not None
+        plan_layer(LayerGemm("c", 64, 256, 66), HEANA, cache=cache)
+        assert len(cache) == 2
+        assert cache.stats()["evictions"] == 1
+        assert cache.get(a.cache_key) is not None   # survived (recently used)
+        re_b = plan_layer(LayerGemm("b", 64, 256, 65), HEANA, cache=cache)
+        assert not re_b.cache_hit                   # b was evicted
+
+    def test_max_entries_validation(self):
+        with pytest.raises(ValueError, match="max_entries"):
+            PlanCache(max_entries=0)
+
+    def test_load_never_overstates_retained(self, tmp_path):
+        """A dump larger than max_entries merges a truncated tail and
+        returns what actually survived, with a warning."""
+        big = PlanCache()
+        schedule_cnn(CNN_ZOO["mobilenet_v2"](), HEANA, 1, cache=big)
+        assert len(big) > 2
+        path = str(tmp_path / "plans.json")
+        big.dump(path)
+        small = PlanCache(max_entries=2)
+        with pytest.warns(RuntimeWarning, match="merging only"):
+            loaded = small.load(path)
+        assert loaded == 2 == len(small)
+
+    def test_degenerate_adc_full_scale_does_not_crash(self):
+        """adc_round keeps adc_readout's floor: fs=0 clamps, no div-zero."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        cfg = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                             noise_enabled=False)
+        out = ops.photonic_matmul(x, w, cfg, impl="ref", adc_fs=0.0)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestNoiseKeyValidation:
+    """noise_enabled=True + key=None must fail loudly, not run silent."""
+
+    def _cfg(self, noise=True):
+        return PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                              noise_enabled=noise)
+
+    def test_photonic_matmul_raises_without_key(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        with pytest.raises(ValueError, match="noise_enabled"):
+            ops.photonic_matmul(x, w, self._cfg())
+
+    def test_photonic_matmul_ok_with_key_or_noise_off(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        noisy = ops.photonic_matmul(x, w, self._cfg(),
+                                    key=jax.random.PRNGKey(2), impl="ref")
+        clean = ops.photonic_matmul(x, w, self._cfg(noise=False),
+                                    impl="ref")
+        assert noisy.shape == clean.shape == (4, 8)
+        assert not np.array_equal(np.asarray(noisy), np.asarray(clean))
+
+    def test_execute_cnn_raises_without_key(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        plan = plan_for_network(params, HEANA, batch=2, cache=PlanCache())
+        with pytest.raises(ValueError, match="noise_enabled"):
+            execute_cnn(params, x, plan, self._cfg())
+
+    def test_reference_forward_rejects_noisy_cfg(self):
+        """The oracle is deterministic by definition — a noise-enabled cfg
+        without a key can't silently run noiseless anymore."""
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        with pytest.raises(ValueError, match="noise_enabled"):
+            reference_forward(params, x, self._cfg())
 
 
 class TestReport:

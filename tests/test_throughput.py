@@ -1,0 +1,47 @@
+"""Throughput-benchmark harness tests (benchmarks/throughput.py).
+
+Pins the CI contract: the compiled serving path cannot silently regress
+to eager/retracing — measure() must report zero warm retraces, bit-exact
+compiled-vs-eager logits, and well-formed summaries for the report layer.
+Batch 1 only: this is a harness test, the full grid (incl. the 5x floor
+at batch 256) runs as `python -m benchmarks.throughput` / in run.py.
+"""
+import pytest
+
+from benchmarks import throughput
+
+
+@pytest.fixture(scope="module")
+def measured():
+    rows, summaries, failures = throughput.measure(batches=(1,), save=False)
+    return rows, summaries, failures
+
+
+class TestThroughputBench:
+    def test_no_hard_failures(self, measured):
+        _, _, failures = measured
+        assert failures == []
+
+    def test_no_warm_retraces_and_bitexact(self, measured):
+        _, summaries, _ = measured
+        (s,) = summaries
+        assert s["retraces_warm"] == 0
+        assert s["bitexact"] is True
+
+    def test_compiled_beats_eager(self, measured):
+        """Even at batch 1 the compiled path must win by a wide margin —
+        eager pays per-call retracing of every Pallas grid step."""
+        _, summaries, _ = measured
+        (s,) = summaries
+        assert s["speedup"] > throughput.SMOKE_MIN_SPEEDUP
+
+    def test_rows_and_summary_shape(self, measured):
+        rows, summaries, _ = measured
+        names = [r.name for r in rows]
+        assert "throughput/small_cnn/b1/compiled_ips" in names
+        assert "throughput/small_cnn/b1/eager_ips" in names
+        assert "throughput/no_retrace_warm" in names
+        (s,) = summaries
+        assert s["kind"] == "throughput" and s["batch"] == 1
+        assert s["compiled_ips"] > 0 and s["eager_ips"] > 0
+        assert s["modeled_fps"] > 0
