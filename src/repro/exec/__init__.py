@@ -12,6 +12,12 @@ The three layers (see ISSUE 1 / paper §4, §6.3):
   * report    — modeled latency/energy aggregated next to executed
     numerics, feeding benchmarks/autoflow.py, benchmarks/throughput.py
     and examples.
+
+Networks are described by the lowering IR (models.lowering.OpGraph —
+stride/padding convs, depthwise convs, pooling, residual adds, concats,
+channel shuffles); models.zoo_cnn registers reduced-scale runnable
+variants of the paper's four evaluation CNNs on it (ISSUE 3), and the
+legacy flat LoweredLayer tuples keep working.
 """
 from repro.exec.executor import (ExecutionResult, LayerTrace,
                                  compile_cache_stats, compiled_forward,
@@ -19,8 +25,9 @@ from repro.exec.executor import (ExecutionResult, LayerTrace,
                                  lowering_fingerprint, plan_for_network,
                                  reference_forward, trace_count)
 from repro.exec.plan_cache import GLOBAL_PLAN_CACHE, PlanCache, fingerprint
-from repro.exec.report import (execution_summary, plan_summary, plan_table,
-                               plan_vs_fixed, render_report, save_summary,
+from repro.exec.report import (execution_summary, graph_summary,
+                               plan_summary, plan_table, plan_vs_fixed,
+                               render_report, save_summary,
                                throughput_summary)
 from repro.exec.scheduler import (CnnPlan, FrozenCandidates, LayerPlan,
                                   TileChoice, plan_layer, schedule_cnn)
@@ -33,5 +40,5 @@ __all__ = [
     "reference_forward", "compiled_forward", "forward_fn", "trace_count",
     "compile_cache_stats", "lowering_fingerprint",
     "plan_summary", "plan_table", "plan_vs_fixed", "execution_summary",
-    "render_report", "save_summary", "throughput_summary",
+    "graph_summary", "render_report", "save_summary", "throughput_summary",
 ]

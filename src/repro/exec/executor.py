@@ -1,10 +1,14 @@
 """End-to-end CNN executor over the Pallas TAOM kernel.
 
-Runs a *runnable* GEMM-lowered CNN (models.cnn.LoweredLayer structure +
-params dict) image-batch in, logits out, with every GEMM executed by
+Runs a *runnable* GEMM-lowered CNN (a models.lowering.OpGraph — stride/
+padding convs, depthwise convs, pooling, residuals, concats, shuffles —
+or a legacy flat models.cnn.LoweredLayer tuple, + params dict)
+image-batch in, logits out, with every GEMM executed by
 kernels.ops.photonic_matmul: quantize -> TAOM kernel (Pallas; interpreted
 on CPU) -> rescale.  This turns the repo's analytic per-figure scripts
-into an actual inference engine producing real activations.
+into an actual inference engine producing real activations — the
+reduced-scale variants of the paper's four evaluation CNNs
+(models.zoo_cnn.ZOO) run through here.
 
 Batching follows the paper's Toeplitz accounting: the image batch folds
 into the GEMM M axis (all images' im2col rows concatenated), which is both
@@ -43,7 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +57,12 @@ from repro.exec import plan_cache as pc
 from repro.exec.scheduler import CnnPlan, LayerPlan
 from repro.kernels import ops
 from repro.models import cnn as cnn_mod
+from repro.models import lowering as lw
 
-_LOWERING_FP_VERSION = 1
+_LOWERING_FP_VERSION = 2
+
+#: A runnable network description: op-graph IR or legacy flat tuple.
+Lowering = Union[lw.OpGraph, Sequence[cnn_mod.LoweredLayer]]
 
 
 @dataclasses.dataclass
@@ -92,13 +100,19 @@ class ExecutionResult:
     def traces(self) -> List[LayerTrace]:
         if self._traces is None:
             fp = [float(v) for v in jax.device_get(self.fingerprints)]
-            self._traces = [
-                LayerTrace(
-                    name=p.name, m=p.c, k=p.k, d=p.d,
+            self._traces = []
+            for i, p in enumerate(self.plan.layers):
+                # "what actually ran": depthwise layers execute as ONE
+                # fused block-diagonal GEMM, so trace the executed
+                # (M, K, D) — LayerGemm.executed owns the convention —
+                # consistent with the tile the scheduler sized for it.
+                m, k, d = lw.LayerGemm(p.name, p.c, p.k, p.d,
+                                       p.count).executed
+                self._traces.append(LayerTrace(
+                    name=p.name, m=m, k=k, d=d,
                     dataflow=p.dataflow.value, block_m=p.tile.block_m,
                     block_d=p.tile.block_d, latency_s=p.latency_s,
-                    energy_j=p.energy_j, out_mean_abs=fp[i])
-                for i, p in enumerate(self.plan.layers)]
+                    energy_j=p.energy_j, out_mean_abs=fp[i]))
         return self._traces
 
     @property
@@ -115,9 +129,15 @@ class ExecutionResult:
         return self
 
 
-def _maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                                 (1, 2, 2, 1), "VALID")
+def _norm_lowering(lowering):
+    """Default + normalize: None -> the small CNN; OpGraph passes
+    through; anything else is frozen into a legacy flat tuple (both
+    forms are hashable, as static jit arguments must be)."""
+    if lowering is None:
+        return cnn_mod.small_cnn_lowering()
+    if isinstance(lowering, lw.OpGraph):
+        return lowering
+    return tuple(lowering)
 
 
 def _layer_matmul(cols: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
@@ -144,47 +164,40 @@ def trace_count() -> int:
 
 def _forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
              key: Optional[jax.Array] = None, *,
-             lowering: Tuple[cnn_mod.LoweredLayer, ...],
-             plan: CnnPlan, cfg: PhotonicConfig, impl: str,
+             lowering, plan: CnnPlan, cfg: PhotonicConfig, impl: str,
              collect_activations: bool):
     """Pure forward: (params, x, key) -> (logits, fingerprints, acts).
 
-    Everything after the array arguments is static configuration; no host
-    sync happens anywhere in the body (fingerprints stay device arrays).
+    Walks the lowering's op graph (models.lowering.graph_forward): every
+    GEMM-bearing node (conv / depthwise_conv / fc) runs through the
+    photonic kernel with its LayerPlan's tiling and an independent noise
+    key; glue nodes (pool / residual_add / concat / shuffle / slice) are
+    plain jnp ops.  Everything after the array arguments is static
+    configuration; no host sync happens anywhere in the body
+    (fingerprints stay device arrays).  Fingerprints are per GEMM node,
+    taken right after its activation (before any downstream glue).
     """
     global _TRACE_COUNT
     _TRACE_COUNT += 1
-    n, h, w = x.shape[0], x.shape[1], x.shape[2]
-    fingerprints: List[jnp.ndarray] = []
-    acts: List[jnp.ndarray] = []
-    for idx, (lyr, lplan) in enumerate(zip(lowering, plan.layers)):
-        wgt = params[lyr.name]
-        layer_key = (jax.random.fold_in(key, idx)
+    graph = cnn_mod.as_graph(lowering, plan=plan)
+
+    def mm(a2d: jnp.ndarray, w2d: jnp.ndarray, gi: int,
+           node: lw.OpNode) -> jnp.ndarray:
+        layer_key = (jax.random.fold_in(key, gi)
                      if key is not None and cfg.noise_enabled else None)
-        if lyr.kind == "conv":
-            cols = cnn_mod._im2col(x, lyr.kk)           # (N, H*W, K)
-            out = _layer_matmul(cols.reshape(-1, cols.shape[-1]), wgt, cfg,
-                                layer_key, lplan, impl)
-            x = out.reshape(n, h, w, wgt.shape[-1])
-        elif lyr.kind == "fc":
-            x = _layer_matmul(x.reshape(n, -1), wgt, cfg, layer_key, lplan,
-                              impl)
-        else:
-            raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
-        if lyr.relu:
-            x = jax.nn.relu(x)
-        if lyr.pool_after:
-            x = _maxpool2x2(x)
-            h //= 2
-            w //= 2
-        # mean |activation| via explicit reciprocal multiply — jnp.mean's
-        # division by the (constant) element count is reassociated by XLA
-        # under jit but not eagerly, and the compiled-vs-eager contract
-        # covers the fingerprints too.
-        fingerprints.append(jnp.sum(jnp.abs(x)) * (1.0 / x.size))
-        if collect_activations:
-            acts.append(x)
-    return x, jnp.stack(fingerprints), tuple(acts)
+        return _layer_matmul(a2d, w2d, cfg, layer_key, plan.layers[gi],
+                             impl)
+
+    vals = lw.graph_forward(params, x, graph, mm)
+    gemm_outs = [vals[n.name] for n in graph.gemm_nodes]
+    # mean |activation| via explicit reciprocal multiply — jnp.mean's
+    # division by the (constant) element count is reassociated by XLA
+    # under jit but not eagerly, and the compiled-vs-eager contract
+    # covers the fingerprints too.
+    fingerprints = [jnp.sum(jnp.abs(v)) * (1.0 / v.size)
+                    for v in gemm_outs]
+    acts = tuple(gemm_outs) if collect_activations else ()
+    return (vals[graph.output.name], jnp.stack(fingerprints), acts)
 
 
 forward_fn = jax.jit(_forward, static_argnames=(
@@ -195,14 +208,20 @@ static — CnnPlan/LayerPlan/TileChoice and PhotonicConfig are hashable by
 value precisely so they can sit in jit's cache key."""
 
 
-def lowering_fingerprint(
-        lowering: Sequence[cnn_mod.LoweredLayer]) -> str:
-    """Content address of a lowered network structure (not its weights)."""
-    return pc.fingerprint({
-        "v": _LOWERING_FP_VERSION,
-        "layers": [[l.name, l.kind, l.relu, l.pool_after, l.kk]
-                   for l in lowering],
-    })
+def lowering_fingerprint(lowering) -> str:
+    """Content address of a lowered network structure (not its weights).
+
+    Covers both forms: op graphs hash every node field; legacy flat
+    tuples keep their historical layout (under a bumped version — the
+    graph path changed what a lowering can express)."""
+    if isinstance(lowering, lw.OpGraph):
+        layers = [dataclasses.asdict(n) for n in lowering.nodes]
+        for d in layers:
+            d["inputs"] = list(d["inputs"])
+    else:
+        layers = [[l.name, l.kind, l.relu, l.pool_after, l.kk]
+                  for l in lowering]
+    return pc.fingerprint({"v": _LOWERING_FP_VERSION, "layers": layers})
 
 
 # Executable-wrapper memo: (lowering fp, per-layer plan cache keys, cfg,
@@ -218,8 +237,7 @@ _FORWARD_CACHE_MAX = 256
 
 
 def compiled_forward(plan: CnnPlan, cfg: PhotonicConfig,
-                     lowering: Optional[Sequence[cnn_mod.LoweredLayer]]
-                     = None,
+                     lowering: Optional[Lowering] = None,
                      impl: str = "auto",
                      collect_activations: bool = False) -> Callable:
     """The compiled serving entry: returns ``fn(params, x, key=None)``.
@@ -229,7 +247,7 @@ def compiled_forward(plan: CnnPlan, cfg: PhotonicConfig,
     (same content-addressed cache keys) share one wrapper even if they are
     distinct objects.
     """
-    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
+    lowering = _norm_lowering(lowering)
     impl = "pallas" if impl == "auto" else impl
     memo_key = (lowering_fingerprint(lowering),
                 tuple(p.cache_key for p in plan.layers), cfg, impl,
@@ -253,21 +271,28 @@ def compile_cache_stats() -> dict:
 
 def clear_compile_cache() -> None:
     _FORWARD_CACHE.clear()
+    _validate_geometry.cache_clear()
 
 
 # ---------------------------------------------------------------------------
 # Validation (eager, before tracing — clear errors instead of reshape noise)
 # ---------------------------------------------------------------------------
+def _gemm_count(lowering) -> int:
+    if isinstance(lowering, lw.OpGraph):
+        return len(lowering.gemm_nodes)
+    return len(lowering)
+
+
 def _validate(x: jnp.ndarray, plan: CnnPlan, cfg: PhotonicConfig,
-              lowering: Tuple[cnn_mod.LoweredLayer, ...],
-              key: Optional[jax.Array]) -> None:
+              lowering, key: Optional[jax.Array]) -> None:
     if x.ndim != 4:
         raise ValueError(f"x must be (N, H, W, C) images, got shape "
                          f"{tuple(x.shape)}")
-    if len(plan.layers) != len(lowering):
+    if len(plan.layers) != _gemm_count(lowering):
         raise ValueError(
             f"plan has {len(plan.layers)} layers, lowering has "
-            f"{len(lowering)} — plan the lowered_gemms of this network")
+            f"{_gemm_count(lowering)} GEMM layers — plan the "
+            f"lowered_gemms of this network")
     n, h, w = x.shape[0], x.shape[1], x.shape[2]
     if n != plan.batch:
         raise ValueError(
@@ -277,24 +302,48 @@ def _validate(x: jnp.ndarray, plan: CnnPlan, cfg: PhotonicConfig,
         raise ValueError(
             "cfg.noise_enabled=True but key=None — pass a root PRNG key "
             "(per-layer keys are folded in) or set noise_enabled=False")
-    # Walk the lowering tracking (H, W) — rectangles are first-class, but
-    # the plan must have been built for THESE spatial dims, and 2x2
-    # pooling genuinely requires even dims.
-    for lyr, lplan in zip(lowering, plan.layers):
-        if lyr.kind == "conv" and lplan.c != plan.batch * h * w:
+    _validate_geometry(lowering, plan, h, w)
+
+
+@functools.lru_cache(maxsize=_FORWARD_CACHE_MAX)
+def _validate_geometry(lowering, plan: CnnPlan, h: int, w: int) -> None:
+    """Structural checks, memoized: the outcome is fully determined by
+    (lowering, plan, H, W) — all hashable — so a warm serving loop pays
+    the Python graph walk once per distinct geometry, not per call.
+    (lru_cache does not cache raises: invalid combinations re-raise
+    their clear error every call.)  Bounded like _FORWARD_CACHE — each
+    entry pins its plan/lowering — and cleared by clear_compile_cache.
+
+    Infers every node's shape for THESE spatial dims — raising the IR's
+    explicit errors for indivisible pooling / mismatched branches —
+    then pins each GEMM node against its LayerPlan: the plan must have
+    been built for exactly this input geometry.
+    """
+    graph = cnn_mod.as_graph(lowering, plan=plan)
+    shapes = lw.infer_shapes(graph, (h, w))
+    for node, lplan in zip(graph.gemm_nodes, plan.layers):
+        oh, ow, oc = shapes[node.name]
+        rows = plan.batch if node.op == "fc" else plan.batch * oh * ow
+        if lplan.c != rows:
+            where = (f"the batch is {plan.batch}" if node.op == "fc" else
+                     f"the input reaches this layer as {plan.batch} x "
+                     f"{oh}x{ow} = {rows} rows")
             raise ValueError(
-                f"{lyr.name}: plan expects {lplan.c} GEMM rows but the "
-                f"input reaches this layer as {plan.batch} x {h}x{w} = "
-                f"{plan.batch * h * w} rows — plan_for_network(in_hw="
-                f"({x.shape[1]}, {x.shape[2]})) for this input size")
-        if lyr.pool_after:
-            if h % 2 or w % 2:
+                f"{node.name}: plan expects {lplan.c} GEMM rows but "
+                f"{where} — plan_for_network(in_hw=({h}, {w})) "
+                f"for this input size")
+        if node.op == "depthwise_conv":
+            ic = shapes[node.inputs[0]][2]
+            if lplan.count != ic:
                 raise ValueError(
-                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
-                    f"got {h}x{w} — rectangular inputs are supported but "
-                    f"each pooled stage must divide by 2")
-            h //= 2
-            w //= 2
+                    f"{node.name}: plan has count={lplan.count} depthwise "
+                    f"groups but the input reaches this layer with "
+                    f"{ic} channels — replan this network")
+        elif lplan.d != oc:
+            raise ValueError(
+                f"{node.name}: plan has D={lplan.d} output channels but "
+                f"the lowering implies {oc} — plan and lowering come "
+                f"from different networks")
 
 
 # ---------------------------------------------------------------------------
@@ -304,24 +353,28 @@ def execute_cnn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
                 plan: CnnPlan, cfg: PhotonicConfig,
                 key: Optional[jax.Array] = None,
                 impl: str = "auto",
-                lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
+                lowering: Optional[Lowering] = None,
                 collect_activations: bool = False,
                 compiled: bool = True) -> ExecutionResult:
     """Run a lowered CNN end-to-end through the photonic kernel.
 
-    params: weight dict keyed by LoweredLayer.name, each (K, D).
+    params: weight dict keyed by GEMM-node (or LoweredLayer) name.
     x: (N, H, W, C) image batch (H != W is fine; the plan must have been
       built for the same spatial dims, see plan_for_network(in_hw=...)).
     plan: CnnPlan over lowered_gemms(params, lowering) at batch >= 1 —
-      layer order must match the lowering (schedule_cnn preserves it).
+      layer order must match the lowering's GEMM nodes (schedule_cnn
+      preserves it).
     key: root PRNG key for detection noise (per-layer keys are folded in);
       REQUIRED when cfg.noise_enabled, forbidden-to-matter otherwise.
     impl: 'pallas' | 'ref' | 'auto' (forwarded to ops.photonic_matmul).
+    lowering: an op-graph (models.lowering.OpGraph — models.zoo_cnn holds
+      the paper networks' runnable variants) or a legacy flat
+      LoweredLayer tuple; defaults to the small CNN.
     compiled: route through the jit-compiled forward (default).  False
       runs the same body op-by-op in Python — the slow pre-fix behavior,
       kept as the measurable baseline for benchmarks/throughput.py.
     """
-    lowering = tuple(lowering or cnn_mod.small_cnn_lowering())
+    lowering = _norm_lowering(lowering)
     impl = "pallas" if impl == "auto" else impl
     _validate(x, plan, cfg, lowering, key)
     if compiled:
@@ -339,8 +392,7 @@ def execute_cnn(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
 
 def reference_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
                       cfg: PhotonicConfig,
-                      lowering: Optional[Sequence[cnn_mod.LoweredLayer]]
-                      = None) -> jnp.ndarray:
+                      lowering: Optional[Lowering] = None) -> jnp.ndarray:
     """Pure-jnp oracle forward: same quantize->accumulate->ADC math via
     kernels/ref.py, driven through the SAME lowered structure the executor
     runs (models.cnn.lowered_apply) — so the oracle covers any lowered
@@ -352,12 +404,13 @@ def reference_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     (the oracle is deterministic by definition; disable noise explicitly).
     """
     mm: Callable = lambda a, w: ops.photonic_matmul(a, w, cfg, impl="ref")
-    return cnn_mod.lowered_apply(params, x, lowering, matmul=mm)
+    return cnn_mod.lowered_apply(params, x, _norm_lowering(lowering),
+                                 matmul=mm)
 
 
 def plan_for_network(params: Dict[str, jnp.ndarray],
                      acc, batch: int = 1, in_hw=16,
-                     lowering: Optional[Sequence[cnn_mod.LoweredLayer]] = None,
+                     lowering: Optional[Lowering] = None,
                      **schedule_kw) -> CnnPlan:
     """Convenience: lower a runnable network's GEMM table and schedule it.
 

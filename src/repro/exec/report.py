@@ -15,6 +15,22 @@ from typing import Dict, Iterable, Optional
 from repro.core.types import Dataflow
 from repro.exec.executor import ExecutionResult
 from repro.exec.scheduler import CnnPlan
+from repro.models.lowering import OpGraph
+
+
+def graph_summary(graph: OpGraph, name: str = "") -> dict:
+    """JSON-safe structural summary of a lowered op graph (the zoo's
+    networks): op histogram + GEMM-layer count, for reports/examples."""
+    ops: Dict[str, int] = {}
+    for n in graph.nodes:
+        ops[n.op] = ops.get(n.op, 0) + 1
+    return {
+        "name": name,
+        "n_nodes": len(graph.nodes),
+        "n_gemm_layers": len(graph.gemm_nodes),
+        "ops": ops,
+        "output": graph.output.name,
+    }
 
 
 def plan_summary(plan: CnnPlan, name: str = "") -> dict:

@@ -56,7 +56,10 @@ from repro.models.cnn import LayerGemm
 # comfortably inside TPU VMEM budgets.
 _BLOCK_M_CANDIDATES = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 _BLOCK_D_CANDIDATES = (128, 256)
-_PLAN_VERSION = 2
+# v3: depthwise (count>1, d=1) layers choose their tile for the GEMM the
+# executor actually runs — the fused block-diagonal (M, kk*kk*C) @ (.., C)
+# — instead of the analytic per-group (M, kk*kk) @ (.., 1) shape.
+_PLAN_VERSION = 3
 
 
 class FrozenCandidates(dict):
@@ -243,7 +246,13 @@ def plan_layer(layer: LayerGemm, acc: pm.AcceleratorConfig, batch: int = 1,
         return _plan_from_dict(cached, layer.name, cache_hit=True)
 
     flow, cost, costs = pm.best_dataflow(g, acc, flows, objective)
-    tile = choose_tile(g.c, g.d, g.k, acc.n)
+    # Dataflow cost is charged on the paper's analytic shape (count
+    # grouped instances), but the tile must fit the GEMM the executor
+    # actually runs — LayerGemm.executed owns that fusion convention
+    # (depthwise groups fuse into one block-diagonal GEMM).
+    em, ek, ed = LayerGemm(layer.name, g.c, g.k, g.d,
+                           layer.count).executed
+    tile = choose_tile(em, ed, ek, acc.n)
     plan = LayerPlan(
         name=layer.name, c=g.c, k=g.k, d=g.d, count=layer.count,
         dataflow=flow,

@@ -16,6 +16,15 @@ published block structures at 224x224 input.
 ``build_small_cnn``/``small_cnn_apply`` additionally provide a *runnable*
 (forward-pass) CNN used by the Table 4 accuracy experiments, whose conv
 layers execute through the photonic GEMM simulation.
+
+Runnable lowerings come in two shapes:
+
+  * the general op-graph IR (models.lowering.OpGraph) — stride/padding
+    convs, depthwise convs, pooling, residual adds, concats, channel
+    shuffles; the paper's four evaluation networks have reduced-scale
+    runnable variants built on it in models.zoo_cnn;
+  * the legacy flat ``LoweredLayer`` tuple (conv/fc chains), kept as a
+    convenience and converted to a graph internally (``as_graph``).
 """
 from __future__ import annotations
 
@@ -25,18 +34,11 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-
-@dataclasses.dataclass(frozen=True)
-class LayerGemm:
-    name: str
-    c: int      # output pixels (rows of I)
-    k: int      # C_in * kh * kw (contraction)
-    d: int      # output channels
-    count: int = 1   # parallel instances (e.g. depthwise groups)
-
-    @property
-    def macs(self) -> int:
-        return self.c * self.k * self.d * self.count
+from repro.models import lowering as lw
+# Re-exported: LayerGemm's home is the lowering IR now (single source of
+# truth for analytic tables AND runnable graphs), but every historical
+# importer uses models.cnn.LayerGemm.
+from repro.models.lowering import LayerGemm, OpGraph  # noqa: F401
 
 
 def _conv(name, hw, cin, kk, cout, count=1) -> LayerGemm:
@@ -196,7 +198,8 @@ def small_cnn_lowering() -> tuple:
 
     Kept next to the forward pass so the two cannot drift: the executor
     (repro.exec.executor) replays exactly this structure through the Pallas
-    kernel, and tests pin it against small_cnn_apply.
+    kernel, and tests pin it against small_cnn_apply.  This is the legacy
+    flat form; ``small_cnn_graph`` is the same network as op-graph IR.
     """
     return (
         LoweredLayer("conv1", "conv", relu=True, pool_after=True),
@@ -206,54 +209,98 @@ def small_cnn_lowering() -> tuple:
     )
 
 
+def small_cnn_graph(num_classes: int = 10, in_ch: int = 3) -> OpGraph:
+    """build_small_cnn as op-graph IR (identical numerics to the legacy
+    flat lowering: conv-relu-pool, conv-relu-pool, conv-relu, fc)."""
+    return OpGraph((
+        lw.input_node(in_ch),
+        lw.conv("conv1", "input", 16),
+        lw.pool("conv1.pool", "conv1"),
+        lw.conv("conv2", "conv1.pool", 32),
+        lw.pool("conv2.pool", "conv2"),
+        lw.conv("conv3", "conv2.pool", 32),
+        lw.fc("fc", "conv3", num_classes),
+    ))
+
+
 def _spatial_dims(in_hw) -> tuple:
-    """Normalize a spatial-size spec: int -> square, (H, W) -> as given."""
-    if isinstance(in_hw, (tuple, list)):
-        h, w = in_hw
-        return int(h), int(w)
-    return int(in_hw), int(in_hw)
+    """Normalize a spatial-size spec: int -> square, (H, W) -> as given.
+
+    Delegates to lowering.spatial_dims, which validates the spec
+    explicitly (length, positivity) instead of failing downstream."""
+    return lw.spatial_dims(in_hw)
+
+
+def graph_from_layers(layers, channels: Dict[str, int],
+                      in_ch: int) -> OpGraph:
+    """Convert a legacy flat LoweredLayer tuple into the op-graph IR.
+
+    ``channels`` maps layer name -> output channels (read off weights or
+    a plan — the flat form never carried them).  pool_after becomes an
+    explicit 2x2/2 max-pool node named ``<layer>.pool``.
+    """
+    nodes = [lw.input_node(in_ch)]
+    prev = "input"
+    for lyr in layers:
+        d = channels[lyr.name]
+        if lyr.kind == "conv":
+            nodes.append(lw.conv(lyr.name, prev, d, kk=lyr.kk,
+                                 relu=lyr.relu))
+        elif lyr.kind == "fc":
+            nodes.append(lw.fc(lyr.name, prev, d, relu=lyr.relu))
+        else:
+            raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
+        prev = lyr.name
+        if lyr.pool_after:
+            nodes.append(lw.pool(f"{lyr.name}.pool", prev))
+            prev = f"{lyr.name}.pool"
+    return OpGraph(tuple(nodes))
+
+
+def as_graph(lowering, params: Optional[dict] = None,
+             plan=None) -> OpGraph:
+    """Normalize any runnable lowering to the op-graph IR.
+
+    OpGraphs pass through; legacy flat tuples need channel counts, read
+    from ``params`` weight shapes (preferred) or a CnnPlan's per-layer
+    ``d`` — the executor's compiled wrapper has a plan but no params.
+    """
+    if isinstance(lowering, OpGraph):
+        return lowering
+    layers = tuple(lowering)
+    if params is not None:
+        channels = {l.name: int(params[l.name].shape[1]) for l in layers}
+    elif plan is not None:
+        channels = {l.name: p.d for l, p in zip(layers, plan.layers)}
+    else:
+        raise ValueError("converting a legacy flat lowering needs params "
+                         "or a plan to recover channel counts")
+    first = layers[0]
+    if first.kind != "conv":
+        raise ValueError(
+            f"legacy flat lowerings must start with a conv layer to "
+            f"recover C_in (got {first.kind!r}) — build an OpGraph with "
+            f"an explicit input node instead")
+    if params is not None:
+        in_ch = int(params[first.name].shape[0]) // (first.kk * first.kk)
+    else:
+        in_ch = next(p.k for p in plan.layers) // (first.kk * first.kk)
+    return graph_from_layers(layers, channels, in_ch)
 
 
 def lowered_gemms(params: dict, lowering=None, in_hw=16) -> List[LayerGemm]:
     """Analytic GEMM table (for the scheduler) of a lowered runnable CNN.
 
-    Walks the lowering, tracking the spatial size through the pools, and
-    reads K/D off the actual weight shapes — the same (C, K, D) the
-    executor will feed the kernel, so plans and execution agree.
+    Walks the lowering (op-graph or legacy flat tuple), tracking spatial
+    size through strides and pools, validating every weight shape against
+    the graph — the same (C, K, D) the executor will feed the kernel, so
+    plans and execution agree.
 
     ``in_hw`` is the input spatial size: an int for square images or an
-    (H, W) pair for rectangular ones (conv rows become H*W).
+    (H, W) pair for rectangular ones (conv rows become H_out*W_out).
     """
-    lowering = lowering or small_cnn_lowering()
-    h, w = _spatial_dims(in_hw)
-    out = []
-    prev_d = None
-    for lyr in lowering:
-        k, d = params[lyr.name].shape
-        if lyr.kind == "conv":
-            c = h * w
-            if prev_d is not None and k != prev_d * lyr.kk * lyr.kk:
-                raise ValueError(
-                    f"{lyr.name}: weight K={k} but expected "
-                    f"{prev_d}*{lyr.kk}^2={prev_d * lyr.kk ** 2} from the "
-                    f"previous layer's channels")
-        else:
-            c = 1
-            if prev_d is not None and k != h * w * prev_d:
-                raise ValueError(
-                    f"{lyr.name}: weight K={k} but the tracked feature map "
-                    f"is {h}x{w}x{prev_d}={h * w * prev_d} — in_hw "
-                    f"does not match these params")
-        out.append(LayerGemm(lyr.name, c, k, d))
-        prev_d = d
-        if lyr.pool_after:
-            if h % 2 or w % 2:
-                raise ValueError(
-                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
-                    f"got {h}x{w} — pad the input or drop pool_after")
-            h //= 2
-            w //= 2
-    return out
+    graph = as_graph(lowering or small_cnn_lowering(), params=params)
+    return lw.graph_gemms(graph, in_hw, params=params)
 
 
 # ---------------------------------------------------------------------------
@@ -277,55 +324,31 @@ def build_small_cnn(key: jax.Array, num_classes: int = 10,
 
 
 def _im2col(x: jnp.ndarray, kk: int = 3) -> jnp.ndarray:
-    """NHWC -> (N, H*W, C*kk*kk) patches with SAME padding (stride 1)."""
-    n, h, w, c = x.shape
-    pad = kk // 2
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    patches = [xp[:, i:i + h, j:j + w, :] for i in range(kk)
-               for j in range(kk)]
-    return jnp.concatenate(patches, axis=-1).reshape(n, h * w, c * kk * kk)
+    """NHWC -> (N, H*W, C*kk*kk) patches with SAME padding (stride 1).
+
+    Legacy shim over lowering.im2col (which also handles stride/padding
+    and returns the output extent)."""
+    cols, _ = lw.im2col(x, kk, kk, stride=1, padding="same")
+    return cols
 
 
 def lowered_apply(params: dict, x: jnp.ndarray, lowering=None,
                   matmul: Optional[Callable] = None) -> jnp.ndarray:
     """Forward pass of ANY lowered runnable CNN, driven by its lowering.
 
-    The single source of truth for what a LoweredLayer sequence computes:
-    the executor (repro.exec.executor) replays exactly this structure
-    through the Pallas kernel, and the bit-exactness oracle
-    (exec.executor.reference_forward) calls this with the *same* lowering
-    the executor ran — so the contract covers every lowered network, not
+    The single source of truth for what a lowering computes — op-graph
+    IR or legacy flat tuple: the executor (repro.exec.executor) replays
+    exactly this structure through the Pallas kernel, and the
+    bit-exactness oracle (exec.executor.reference_forward) calls this
+    with the *same* lowering the executor ran — so the contract covers
+    every lowered network (stride/depthwise/residual/pool included), not
     just the small CNN.
 
     ``matmul(a, w)`` defaults to exact and can be the photonic simulation
-    (ops.photonic_matmul partial).  Tracks (H, W) independently, so
-    rectangular images are first-class.
+    (ops.photonic_matmul partial).  Rectangular images are first-class.
     """
-    lowering = tuple(lowering or small_cnn_lowering())
-    mm = matmul or (lambda a, w: a @ w)
-    n, h, w, _ = x.shape
-    for lyr in lowering:
-        wgt = params[lyr.name]
-        if lyr.kind == "conv":
-            cols = _im2col(x, lyr.kk)              # (N, H*W, K)
-            out = mm(cols.reshape(-1, cols.shape[-1]), wgt)
-            x = out.reshape(n, h, w, wgt.shape[-1])
-        elif lyr.kind == "fc":
-            x = mm(x.reshape(n, -1), wgt)
-        else:
-            raise ValueError(f"unknown lowered-layer kind: {lyr.kind!r}")
-        if lyr.relu:
-            x = jax.nn.relu(x)
-        if lyr.pool_after:
-            if h % 2 or w % 2:
-                raise ValueError(
-                    f"{lyr.name}: 2x2 max pool needs even spatial dims, "
-                    f"got {h}x{w}")
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-            h //= 2
-            w //= 2
-    return x
+    graph = as_graph(lowering or small_cnn_lowering(), params=params)
+    return lw.graph_apply(params, x, graph, matmul)
 
 
 def small_cnn_apply(params: dict, x: jnp.ndarray,

@@ -262,8 +262,10 @@ class TestCompiledForward:
                                       np.asarray(e.logits))
         # fingerprints are diagnostics: same program, but reduction order
         # may differ between fused/eager reduces — tight tolerance only
+        # (per-GEMM-node fingerprints reduce over the pre-pool tensors,
+        # so the fused/eager divergence is a few ULP larger than before)
         np.testing.assert_allclose(np.asarray(c.fingerprints),
-                                   np.asarray(e.fingerprints), rtol=1e-6)
+                                   np.asarray(e.fingerprints), rtol=5e-6)
 
     @pytest.mark.parametrize("noise", [False, True])
     def test_compiled_bit_exact_vs_eager_batch256(self, noise):
@@ -432,12 +434,12 @@ class TestRectangularInputs:
 
     def test_odd_spatial_dim_pooling_raises(self):
         params, x, cfg = self._setup()
-        with pytest.raises(ValueError, match="even spatial"):
+        with pytest.raises(ValueError, match="does not tile H=15"):
             cnn.lowered_gemms(params, in_hw=(15, 8))
         plan = plan_for_network(params, HEANA, batch=2, in_hw=(16, 8),
                                 cache=PlanCache())
         x_odd = jax.random.normal(jax.random.PRNGKey(2), (2, 15, 8, 3))
-        with pytest.raises(ValueError, match="even spatial|rows"):
+        with pytest.raises(ValueError, match="does not tile|rows"):
             execute_cnn(params, x_odd, plan, cfg)
 
     def test_non_image_input_raises(self):
