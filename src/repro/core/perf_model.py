@@ -249,4 +249,9 @@ def evaluate_suite(backends: Iterable[str], dataflows: Iterable[Dataflow],
 
 
 def gmean(vals: List[float]) -> float:
+    if not vals:
+        raise ValueError(
+            "gmean of an empty sequence is undefined — the benchmark "
+            "suite being aggregated produced no results (check upstream "
+            "filters/failures)")
     return math.exp(sum(math.log(v) for v in vals) / len(vals))

@@ -11,7 +11,13 @@ The three layers (see ISSUE 1 / paper §4, §6.3):
     baked in as static arguments and zero per-layer host syncs;
   * report    — modeled latency/energy aggregated next to executed
     numerics, feeding benchmarks/autoflow.py, benchmarks/throughput.py
-    and examples.
+    and examples;
+  * serving   — batched multi-device serving engine over the compiled
+    forward: power-of-two batch buckets (one pre-traced plan each, AOT
+    warmup), a thread-safe micro-batcher coalescing single-image
+    requests, a data-parallel path sharding the bucketed batch over
+    jax.devices() (bitwise equal to single-device, noise off), and
+    p50/p99/throughput/padding metrics (ISSUE 4).
 
 Networks are described by the lowering IR (models.lowering.OpGraph —
 stride/padding convs, depthwise convs, pooling, residual adds, concats,
@@ -28,13 +34,18 @@ from repro.exec.plan_cache import GLOBAL_PLAN_CACHE, PlanCache, fingerprint
 from repro.exec.report import (execution_summary, graph_summary,
                                plan_summary, plan_table, plan_vs_fixed,
                                render_report, save_summary,
-                               throughput_summary)
+                               serving_summary, throughput_summary)
 from repro.exec.scheduler import (CnnPlan, FrozenCandidates, LayerPlan,
-                                  TileChoice, plan_layer, schedule_cnn)
+                                  TileChoice, plan_layer, schedule_buckets,
+                                  schedule_cnn)
+from repro.exec.serving import (MicroBatcher, ServingEngine, bucket_for,
+                                power_of_two_buckets)
 
 __all__ = [
     "CnnPlan", "FrozenCandidates", "LayerPlan", "TileChoice", "plan_layer",
-    "schedule_cnn",
+    "schedule_cnn", "schedule_buckets",
+    "ServingEngine", "MicroBatcher", "power_of_two_buckets", "bucket_for",
+    "serving_summary",
     "PlanCache", "GLOBAL_PLAN_CACHE", "fingerprint",
     "ExecutionResult", "LayerTrace", "execute_cnn", "plan_for_network",
     "reference_forward", "compiled_forward", "forward_fn", "trace_count",

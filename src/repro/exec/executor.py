@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
@@ -154,12 +155,17 @@ def _layer_matmul(cols: jnp.ndarray, w: jnp.ndarray, cfg: PhotonicConfig,
 # Counts Python executions of the forward body.  Under jit the body runs
 # only while TRACING, so a warm compiled call leaves the counter untouched
 # — tests and benchmarks/throughput.py assert no-retrace with this.
+# Guarded by a lock: concurrent serving threads may trace simultaneously
+# (cold buckets), and ``count += 1`` is not atomic across the read/write —
+# a lost increment would let a real retrace slip past the no-retrace gates.
 _TRACE_COUNT = 0
+_TRACE_LOCK = threading.Lock()
 
 
 def trace_count() -> int:
     """How many times the forward body has been traced/executed in Python."""
-    return _TRACE_COUNT
+    with _TRACE_LOCK:
+        return _TRACE_COUNT
 
 
 def _forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
@@ -178,7 +184,8 @@ def _forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     taken right after its activation (before any downstream glue).
     """
     global _TRACE_COUNT
-    _TRACE_COUNT += 1
+    with _TRACE_LOCK:
+        _TRACE_COUNT += 1
     graph = cnn_mod.as_graph(lowering, plan=plan)
 
     def mm(a2d: jnp.ndarray, w2d: jnp.ndarray, gi: int,
@@ -232,8 +239,14 @@ def lowering_fingerprint(lowering) -> str:
 # without limit.  (Evicting a wrapper drops its pinned CnnPlan/lowering;
 # traced executables already in jit's global cache are NOT reclaimed —
 # call jax.clear_caches() if that ever matters.)
+#
+# All access goes through _FORWARD_LOCK: the serving front-end
+# (exec.serving) calls compiled_forward from concurrent request threads,
+# and an unguarded get/insert/move_to_end/popitem sequence on the
+# OrderedDict can corrupt its internal linkage or evict mid-iteration.
 _FORWARD_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
 _FORWARD_CACHE_MAX = 256
+_FORWARD_LOCK = threading.RLock()
 
 
 def compiled_forward(plan: CnnPlan, cfg: PhotonicConfig,
@@ -245,33 +258,38 @@ def compiled_forward(plan: CnnPlan, cfg: PhotonicConfig,
     Warm calls execute a cached jit executable — no retracing, no
     per-layer host syncs.  Two plans that solve the same planning problems
     (same content-addressed cache keys) share one wrapper even if they are
-    distinct objects.
+    distinct objects.  Thread-safe: concurrent serving threads may call
+    this freely (they serialize only on the memo lookup, not the forward).
     """
     lowering = _norm_lowering(lowering)
     impl = "pallas" if impl == "auto" else impl
     memo_key = (lowering_fingerprint(lowering),
                 tuple(p.cache_key for p in plan.layers), cfg, impl,
                 collect_activations)
-    fn = _FORWARD_CACHE.get(memo_key)
-    if fn is None:
-        fn = functools.partial(forward_fn, lowering=lowering, plan=plan,
-                               cfg=cfg, impl=impl,
-                               collect_activations=collect_activations)
-        _FORWARD_CACHE[memo_key] = fn
-        while len(_FORWARD_CACHE) > _FORWARD_CACHE_MAX:
-            _FORWARD_CACHE.popitem(last=False)
-    else:
-        _FORWARD_CACHE.move_to_end(memo_key)
-    return fn
+    with _FORWARD_LOCK:
+        fn = _FORWARD_CACHE.get(memo_key)
+        if fn is None:
+            fn = functools.partial(forward_fn, lowering=lowering, plan=plan,
+                                   cfg=cfg, impl=impl,
+                                   collect_activations=collect_activations)
+            _FORWARD_CACHE[memo_key] = fn
+            while len(_FORWARD_CACHE) > _FORWARD_CACHE_MAX:
+                _FORWARD_CACHE.popitem(last=False)
+        else:
+            _FORWARD_CACHE.move_to_end(memo_key)
+        return fn
 
 
 def compile_cache_stats() -> dict:
-    return {"entries": len(_FORWARD_CACHE)}
+    with _FORWARD_LOCK:
+        return {"entries": len(_FORWARD_CACHE),
+                "max_entries": _FORWARD_CACHE_MAX}
 
 
 def clear_compile_cache() -> None:
-    _FORWARD_CACHE.clear()
-    _validate_geometry.cache_clear()
+    with _FORWARD_LOCK:
+        _FORWARD_CACHE.clear()
+        _validate_geometry.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -297,12 +315,20 @@ def _validate(x: jnp.ndarray, plan: CnnPlan, cfg: PhotonicConfig,
     if n != plan.batch:
         raise ValueError(
             f"plan was scheduled for batch {plan.batch} but x has batch "
-            f"{n} — modeled and executed numbers would disagree")
+            f"{n} — modeled and executed numbers would disagree; for "
+            f"mixed-size traffic use exec.serving.ServingEngine, which "
+            f"pads each request up to a power-of-two batch bucket with "
+            f"its own pre-traced plan and slices the results back")
     if cfg.noise_enabled and key is None:
         raise ValueError(
             "cfg.noise_enabled=True but key=None — pass a root PRNG key "
             "(per-layer keys are folded in) or set noise_enabled=False")
-    _validate_geometry(lowering, plan, h, w)
+    # lru_cache's C implementation is safe on CPython, but the contract
+    # here ("warm loop pays the graph walk once") shouldn't depend on
+    # that detail: serialize on the same lock the wrapper memo uses so
+    # concurrent serving threads can't interleave memo fill + clear.
+    with _FORWARD_LOCK:
+        _validate_geometry(lowering, plan, h, w)
 
 
 @functools.lru_cache(maxsize=_FORWARD_CACHE_MAX)

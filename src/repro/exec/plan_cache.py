@@ -109,9 +109,18 @@ class PlanCache:
 
     # -- persistence --------------------------------------------------------
     def dump(self, path: str) -> None:
-        """Atomically persist the store as JSON (write temp + os.replace)."""
+        """Atomically persist the store as JSON (write temp + os.replace).
+
+        Entries are written in LRU order (least- to most-recently used) —
+        the OrderedDict's own iteration order.  ``sort_keys`` must NOT be
+        used on the top level: sha256 keys sort lexicographically, which
+        would scramble recency and make ``load``'s "keep only the last
+        ``max_entries``" trim an arbitrary subset instead of the MRU set
+        it promises.  (Values are plan dicts; their key order is
+        irrelevant.)
+        """
         with self._lock:
-            blob = json.dumps(self._store, sort_keys=True)
+            blob = json.dumps(self._store)
         directory = os.path.dirname(os.path.abspath(path))
         fd, tmp = tempfile.mkstemp(prefix=".plan_cache.", suffix=".tmp",
                                    dir=directory)

@@ -134,6 +134,39 @@ def throughput_summary(name: str, batch: int, compiled_ips: float,
     return out
 
 
+def serving_summary(name: str, batch_bucket: int, engine_stats: dict,
+                    bucketed_ips: float, per_request_ips: float,
+                    extras: Optional[dict] = None) -> dict:
+    """JSON-safe record of one serving-engine measurement.
+
+    ``bucketed_ips`` is the engine's sustained warm throughput for this
+    cell; ``per_request_ips`` is the single-image-at-a-time baseline
+    (batch-1 plan, one compiled call per image) the bucketed path is
+    amortizing away.  ``engine_stats`` is ServingEngine.stats() — the
+    padding/latency/cache evidence rides along verbatim.
+    """
+    out = {
+        "kind": "serving",
+        "name": name,
+        "bucket": batch_bucket,
+        "bucketed_ips": bucketed_ips,
+        "per_request_ips": per_request_ips,
+        "speedup": (bucketed_ips / per_request_ips) if per_request_ips > 0
+        else float("inf"),
+        "latency_p50_s": engine_stats.get("latency_p50_s"),
+        "latency_p99_s": engine_stats.get("latency_p99_s"),
+        "padding_fraction": engine_stats.get("padding_fraction"),
+        "retraces_since_warmup": engine_stats.get("retraces_since_warmup"),
+        "data_parallel": engine_stats.get("data_parallel"),
+        "n_devices": engine_stats.get("n_devices"),
+        "plan_cache": engine_stats.get("plan_cache"),
+        "compile_cache": engine_stats.get("compile_cache"),
+    }
+    if extras:
+        out.update(extras)
+    return out
+
+
 def render_report(summaries: Iterable[dict]) -> str:
     """Markdown table over plan summaries (one row per CNN/config)."""
     lines = [

@@ -287,3 +287,24 @@ def schedule_cnn(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
     return CnnPlan(layers=tuple(plans), acc=acc, batch=batch,
                    objective=objective, result=result,
                    cache_hits=hits, cache_misses=len(plans) - hits)
+
+
+def schedule_buckets(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
+                     batches: Sequence[int], objective: str = "latency",
+                     flows: Sequence[Dataflow] = tuple(Dataflow),
+                     cache: Optional[pc.PlanCache] = None,
+                     ) -> Dict[int, CnnPlan]:
+    """Schedule one network at several batch sizes (the serving buckets).
+
+    The batched serving engine (exec.serving) plans every power-of-two
+    bucket ahead of time; this keeps all of a network's bucket plans on
+    one shared plan cache, so layers whose batched GEMM shape repeats
+    across buckets (the fc layer, depthwise groups) hit instead of
+    re-searching.  Returns {batch: CnnPlan} in the given bucket order.
+    """
+    cache = cache if cache is not None else pc.GLOBAL_PLAN_CACHE
+    layers = list(layers)
+    return {int(b): schedule_cnn(layers, acc, batch=int(b),
+                                 objective=objective, flows=flows,
+                                 cache=cache)
+            for b in batches}

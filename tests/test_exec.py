@@ -528,6 +528,30 @@ class TestPlanCacheHardening:
             loaded = small.load(path)
         assert loaded == 2 == len(small)
 
+    def test_dump_preserves_lru_order_through_overflow(self, tmp_path):
+        """ISSUE 4 satellite: dump used sort_keys on the store, so an
+        overflowing load trimmed a LEXICOGRAPHIC subset of the sha256
+        keys instead of the most-recently-used entries it promises.
+        Round trip: touch a known subset, dump, load into a smaller
+        cache — exactly the MRU entries must survive."""
+        big = PlanCache()
+        plans = [plan_layer(LayerGemm(f"l{i}", 64, 256, 64 + i), HEANA,
+                            cache=big) for i in range(8)]
+        # Touch 3 entries (spread across the key space) to make them MRU.
+        mru = [plans[i].cache_key for i in (5, 0, 3)]
+        for k in mru:
+            assert big.get(k) is not None
+        path = str(tmp_path / "plans.json")
+        big.dump(path)
+        small = PlanCache(max_entries=3)
+        with pytest.warns(RuntimeWarning, match="merging only"):
+            assert small.load(path) == 3
+        for k in mru:                    # the touched (MRU) set survived
+            assert small.get(k) is not None
+        lru_keys = {p.cache_key for p in plans} - set(mru)
+        for k in lru_keys:
+            assert small.get(k) is None
+
     def test_degenerate_adc_full_scale_does_not_crash(self):
         """adc_round keeps adc_readout's floor: fs=0 clamps, no div-zero."""
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
