@@ -1,0 +1,205 @@
+"""Executed-trace energy & FPS/W accounting from one operating point
+(ISSUE 5).
+
+Everything in one cell derives from a single ``core.hw.OperatingPoint``
+— DPE size N from the scalability solver, detection sigma from the link
+budget, per-event energies from Table 3 — which fans out into the kernel
+``PhotonicConfig``, the scheduler plans (plan v4 embeds the point), and
+the executed-trace energy accounting.  Two claims are exercised:
+
+  * **Coherence** — every zoo network, actually executed through the
+    compiled Pallas path at its operating point, reports executed-trace
+    FPS and FPS/W that match the analytic ``perf_model.cnn_inference``
+    prediction (same per-layer dataflows) within ``COHERENCE_RTOL``.
+    This is coherence *by construction*: one gemm_cost accounting path
+    charges both sides, so any gap means plan/lowering/batch-folding
+    drift — exactly the silent divergence the OperatingPoint refactor
+    exists to make impossible.
+
+  * **Equal-area headline** — the paper's gmean anchors over the four
+    full-size evaluation CNNs at the Table 2 area-matched points:
+    HEANA-OS vs the best dataflow of each baseline must keep >= 66x FPS
+    (abstract) and reproduce the FPS/W anchors (89x vs AMW, 84x vs MAW,
+    Fig. 11b) within the repo's documented 25% calibration tolerance
+    (DESIGN.md §6 — the same gate tests/test_benchmarks.py applies to
+    fig11).
+
+``--smoke`` executes one network plus the (cheap, analytic) headline
+gates and exits nonzero on any contract breach — the CI energy-smoke
+job.  Full runs execute all four mini networks and cache JSONs under
+experiments/energy/ for benchmarks/report.py's §Energy table.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+import jax
+
+from benchmarks.common import Row, timed
+from repro.core import hw
+from repro.core import perf_model as pm
+from repro.core.types import Dataflow
+from repro.exec import PlanCache, energy_summary, execute_cnn, \
+    plan_for_network, save_summary
+from repro.models.cnn import CNN_ZOO
+from repro.models.zoo_cnn import PAPER_ZOO, ZOO
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "energy")
+
+#: Executed-trace vs analytic relative tolerance.  Both sides run the
+#: same event accounting; the only admissible gap is float summation
+#: order across the per-layer loop.
+COHERENCE_RTOL = 1e-9
+
+#: FPS/W anchor calibration tolerance (DESIGN.md §6): the 0.05-FSR
+#: tuning-excursion constant was calibrated once against the Fig. 11b
+#: gmean anchors and held fixed; predictions must stay within 25%.
+FPSW_ANCHORS = {"amw": 89.0, "maw": 84.0}
+FPSW_CAL_TOL = 0.75
+FPS_FLOOR = 66.0
+
+
+def _headline_rows(dr: float = 1.0) -> List[Row]:
+    """The equal-area gmean anchors over the FULL-SIZE evaluation CNNs,
+    every cell derived from an OperatingPoint (analytic — these networks
+    are far beyond what the host simulation executes)."""
+    rows: List[Row] = []
+
+    def suite():
+        table = {}
+        for name, fn in CNN_ZOO.items():
+            layers = fn()
+            for be in ("heana", "amw", "maw"):
+                # HEANA is compared as HEANA-OS (the paper's headline);
+                # only the baselines get their best-of-three dataflow.
+                flows = (Dataflow.OS,) if be == "heana" else tuple(Dataflow)
+                for flow in flows:
+                    op = hw.OperatingPoint.equal_area(be, flow, dr)
+                    table[(name, be, flow.value)] = pm.cnn_inference(
+                        layers, op.accelerator_config())
+        return table
+
+    table, us = timed(suite)
+    for metric, attr in (("fps", "fps"), ("fpsw", "fps_per_watt")):
+        for base in ("amw", "maw"):
+            ratios = []
+            for cnn in CNN_ZOO:
+                h = getattr(table[(cnn, "heana", "os")], attr)
+                b = max(getattr(table[(cnn, base, f.value)], attr)
+                        for f in Dataflow)
+                ratios.append(h / b)
+            rows.append(Row(f"energy/equal_area/{metric}/"
+                            f"heana_os_vs_{base}/dr{int(dr)}",
+                            us, round(pm.gmean(ratios), 2)))
+    return rows
+
+
+def _check_headline(rows: Sequence[Row]) -> List[str]:
+    vals = {r.name.split("energy/equal_area/")[1]: r.derived for r in rows
+            if "equal_area" in r.name}
+    probs = []
+    for base in ("amw", "maw"):
+        fps = vals[f"fps/heana_os_vs_{base}/dr1"]
+        fpsw = vals[f"fpsw/heana_os_vs_{base}/dr1"]
+        if fps < FPS_FLOOR:
+            probs.append(f"fps gmean vs {base} = {fps} < {FPS_FLOOR}")
+        if fpsw < FPSW_CAL_TOL * FPSW_ANCHORS[base]:
+            probs.append(f"fps/W gmean vs {base} = {fpsw} < "
+                         f"{FPSW_CAL_TOL} * {FPSW_ANCHORS[base]} anchor")
+    return probs
+
+
+def _executed_cell(name: str, batch: int = 1, seed: int = 0):
+    """Execute one zoo network at the HEANA equal-area operating point
+    and return (summary dict, coherence problems)."""
+    model = ZOO[name]
+    op = hw.OperatingPoint.equal_area("heana", Dataflow.OS, 1.0,
+                                      noise_enabled=False)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          (batch, *model.in_hw, model.in_ch))
+    plan = plan_for_network(params, op, batch=batch, in_hw=model.in_hw,
+                            lowering=model.graph, cache=PlanCache())
+    res = execute_cnn(params, x, plan, op.kernel_config(),
+                      impl="pallas", lowering=model.graph)
+    res.block_until_ready()
+    executed = res.energy()
+    analytic = pm.cnn_inference(model.gemms(params), plan.acc, batch=batch,
+                                dataflows=list(plan.dataflows),
+                                optics=op.optics)
+    summary = energy_summary(name, op, executed, analytic,
+                             extras={"dataflow_mix": plan.mix()})
+    probs = []
+    for key, tol in (("fps_rel_gap", COHERENCE_RTOL),
+                     ("fpsw_rel_gap", COHERENCE_RTOL)):
+        if summary[key] > tol:
+            probs.append(f"{name}: executed-trace {key} = "
+                         f"{summary[key]:.3e} > {tol} — the executed "
+                         f"system diverged from the analytic model")
+    return summary, probs
+
+
+def _run_cells(networks: Sequence[str], batch: int, save: bool
+               ) -> tuple:
+    """One shared driver for run() and main(): headline gates + executed
+    cells.  Returns (rows, problems); a breached cell's summary is NEVER
+    cached (report.py's table promises the 1e-9 gap)."""
+    rows = _headline_rows()
+    problems = _check_headline(rows)
+    for name in networks:
+        summary, probs = _executed_cell(name, batch=batch)
+        problems += probs
+        if save and not probs:
+            save_summary(summary, EXP_DIR, f"exec_{name}_b{batch}.json")
+        rows.append(Row(f"energy/executed/{name}/fps", 0.0,
+                        round(summary["executed_fps"], 1)))
+        rows.append(Row(f"energy/executed/{name}/fps_per_watt", 0.0,
+                        round(summary["executed_fps_per_watt"], 2)))
+        rows.append(Row(f"energy/executed/{name}/uj_per_image", 0.0,
+                        round(summary["executed_j_per_image"] * 1e6, 3)))
+        rows.append(Row(f"energy/executed/{name}/coherence_rel_gap", 0.0,
+                        f"{max(summary['fps_rel_gap'], summary['fpsw_rel_gap']):.1e}"))
+    return rows, problems
+
+
+def run(networks: Optional[Sequence[str]] = None, batch: int = 1,
+        save: bool = True) -> List[Row]:
+    """Harness entry (benchmarks.run): raises on any contract breach so
+    the aggregator's per-module error handling reports it (exit 1 +
+    <tag>/ERROR row) instead of silently caching breached JSONs."""
+    networks = list(networks if networks is not None else PAPER_ZOO)
+    rows, problems = _run_cells(networks, batch, save)
+    if problems:
+        raise RuntimeError("energy contract breach: " + "; ".join(problems))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="one executed network + analytic headline gates; "
+                         "nonzero exit on any contract breach (CI)")
+    ap.add_argument("--batch", type=int, default=1)
+    args = ap.parse_args()
+
+    networks = ["resnet_mini"] if args.smoke else list(PAPER_ZOO)
+    rows, problems = _run_cells(networks, args.batch, save=True)
+    for r in rows:
+        print(r.csv())
+
+    if problems:
+        print("ENERGY CONTRACT BREACH:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print("energy contracts hold: equal-area anchors reproduced, "
+          "executed-trace coherent with the analytic model")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

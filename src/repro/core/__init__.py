@@ -1,6 +1,9 @@
 """HEANA core: the paper's contribution as composable JAX modules."""
 from repro.core.types import (Backend, Dataflow, OpticalParams,
                               PhotonicConfig, TPU_V5E, TpuTarget)
+from repro.core.hw import (EventEnergies, OperatingPoint, TraceEnergy,
+                           check_kernel_plan_coherence,
+                           kernel_plan_mismatches, trace_energy)
 from repro.core.photonic_gemm import (photonic_dot_general, device_level_dot,
                                       detection_sigma, sample_noise,
                                       noise_shape, num_chunks)
@@ -13,6 +16,8 @@ __all__ = [
     "Backend", "Dataflow", "OpticalParams", "PhotonicConfig", "TPU_V5E",
     "TpuTarget", "photonic_dot_general", "device_level_dot",
     "detection_sigma", "sample_noise", "noise_shape", "num_chunks",
+    "OperatingPoint", "EventEnergies", "TraceEnergy", "trace_energy",
+    "kernel_plan_mismatches", "check_kernel_plan_coherence",
     "max_dpe_size", "output_power_dbm", "fig9_surface", "table2_dpu_config",
     "quantize", "taom_multiply", "encode_time_amplitude", "bpca", "noise",
 ]

@@ -32,7 +32,6 @@ from typing import Dict, Iterable, List
 
 from repro.core import dataflow as df
 from repro.core import energy as en
-from repro.core import scalability
 from repro.core.types import (PERIPHERALS, Dataflow, EO_TUNING_LATENCY_NS,
                               OS_COHERENT_PULSES_PER_CYCLE, OpticalParams,
                               TO_TUNING_LATENCY_NS)
@@ -41,6 +40,13 @@ from repro.models.cnn import CNN_ZOO, LayerGemm
 
 @dataclasses.dataclass(frozen=True)
 class AcceleratorConfig:
+    """Whole-accelerator geometry the perf model / scheduler consume.
+
+    Like types.PhotonicConfig this is a low-level carrier: derive it from
+    a ``core.hw.OperatingPoint`` (``op.accelerator_config()``) so N and
+    the DPU count stay functions of (backend, bits, DR) instead of
+    hand-set knobs that can drift from the kernel config.
+    """
     backend: str                 # heana | amw | maw | amw_bpca | maw_bpca
     dataflow: Dataflow
     data_rate_gsps: float
@@ -51,9 +57,16 @@ class AcceleratorConfig:
     @classmethod
     def equal_area(cls, backend: str, dataflow: Dataflow,
                    data_rate_gsps: float) -> "AcceleratorConfig":
-        """Paper Table 2: area-matched DPU counts at 4-bit precision."""
-        n, count = scalability.table2_dpu_config(backend, data_rate_gsps)
-        return cls(backend, dataflow, data_rate_gsps, n, n, count)
+        """Paper Table 2: area-matched DPU counts at 4-bit precision.
+
+        Delegates to core.hw.OperatingPoint.equal_area — the single
+        source of truth for operating-point-derived hardware (prefer
+        passing the OperatingPoint itself to the scheduler; it then rides
+        along in the plan and pins the kernel config too).
+        """
+        from repro.core import hw
+        return hw.OperatingPoint.equal_area(
+            backend, dataflow, data_rate_gsps).accelerator_config()
 
     @property
     def has_bpca(self) -> bool:
@@ -183,6 +196,45 @@ def best_dataflow(g: df.GemmShape, acc: AcceleratorConfig,
     return flow, cost, costs
 
 
+_DYNAMIC_ENERGY_FIELDS = ("laser", "dac", "adc", "tuning", "buffer",
+                          "reduction")
+
+
+def layer_costs(layers, acc: AcceleratorConfig, batch: int = 1,
+                dataflows: Iterable[Dataflow] | None = None,
+                optics: OpticalParams | None = None) -> List[GemmCost]:
+    """Per-layer GemmCosts with batch folded into rows and the layer's
+    ``count`` applied — THE accounting path shared by the analytic model
+    (``cnn_inference``) and the executed-trace side (core.hw.
+    trace_energy): one implementation, so modeled and executed numbers
+    cannot drift.
+
+    ``layers`` is anything with ``.c/.k/.d/.count`` (LayerGemm rows, or
+    a plan's LayerPlan entries with the batch already folded — pass
+    ``batch=1`` then).  The returned costs carry no static-power share
+    (that is a whole-network wall-clock term the callers add).
+    """
+    layers = list(layers)
+    if dataflows is None:
+        per_layer_acc = [acc] * len(layers)
+    else:
+        per_layer_acc = [dataclasses.replace(acc, dataflow=flow)
+                         for flow in dataflows]
+        if len(per_layer_acc) != len(layers):
+            raise ValueError("dataflows must match layers one-to-one")
+    out: List[GemmCost] = []
+    for layer, layer_acc in zip(layers, per_layer_acc):
+        g = df.GemmShape(layer.c * batch, layer.k, layer.d)
+        cost = gemm_cost(g, layer_acc, optics)
+        # `count` independent GEMM instances (depthwise groups): total DPU
+        # work scales by count, still spread over the same n_dpus.
+        e = en.EnergyBreakdown(**{
+            f: getattr(cost.energy, f) * layer.count
+            for f in _DYNAMIC_ENERGY_FIELDS})
+        out.append(GemmCost(cost.latency_s * layer.count, e))
+    return out
+
+
 @dataclasses.dataclass
 class InferenceResult:
     fps: float
@@ -195,6 +247,7 @@ class InferenceResult:
 def cnn_inference(layers: Iterable[LayerGemm], acc: AcceleratorConfig,
                   batch: int = 1,
                   dataflows: Iterable[Dataflow] | None = None,
+                  optics: OpticalParams | None = None,
                   ) -> InferenceResult:
     """FPS and FPS/W for a CNN (list of GEMM layers) on an accelerator.
 
@@ -205,26 +258,18 @@ def cnn_inference(layers: Iterable[LayerGemm], acc: AcceleratorConfig,
     ``dataflows`` optionally overrides ``acc.dataflow`` per layer (same
     length as ``layers``) — the mixed-dataflow execution a HEANA plan from
     repro.exec.scheduler describes.
+
+    ``optics`` (default OpticalParams) scales the laser-energy term; a
+    plan scheduled from an OperatingPoint with non-default optics passes
+    them here so modeled totals match the point's physics.
     """
-    layers = list(layers)
-    if dataflows is None:
-        per_layer_acc = [acc] * len(layers)
-    else:
-        per_layer_acc = [dataclasses.replace(acc, dataflow=flow)
-                         for flow in dataflows]
-        if len(per_layer_acc) != len(layers):
-            raise ValueError("dataflows must match layers one-to-one")
+    costs = layer_costs(layers, acc, batch, dataflows, optics)
     total_t = 0.0
     total_e = en.EnergyBreakdown()
-    for layer, layer_acc in zip(layers, per_layer_acc):
-        g = df.GemmShape(layer.c * batch, layer.k, layer.d)
-        cost = gemm_cost(g, layer_acc)
-        # `count` independent GEMM instances (depthwise groups): total DPU
-        # work scales by count, still spread over the same n_dpus.
-        total_t += cost.latency_s * layer.count
-        for f in ("laser", "dac", "adc", "tuning", "buffer", "reduction"):
-            setattr(total_e, f,
-                    getattr(total_e, f) + getattr(cost.energy, f) * layer.count)
+    for cost in costs:
+        total_t += cost.latency_s
+        for f in _DYNAMIC_ENERGY_FIELDS:
+            setattr(total_e, f, getattr(total_e, f) + getattr(cost.energy, f))
     total_e.static = en.static_power_w(acc.n_dpus) * total_t
     fps = batch / total_t
     watts = total_e.total / total_t

@@ -72,14 +72,22 @@ def design_point(backend: Backend, bits: int, data_rate_gsps: float,
                  **overrides) -> PhotonicConfig:
     """A self-consistent PhotonicConfig at the scalability design point.
 
-    Chooses N = max_dpe_size(backend, bits, DR), at which the link-budget
-    power delivers exactly ``bits`` ENOB (paper Fig. 9 operating points).
-    Falls back to N=1 when the precision is optically infeasible.
+    Thin wrapper over core.hw.OperatingPoint (the single source of truth
+    for solver-derived hardware): N = max_dpe_size(backend, bits, DR), at
+    which the link-budget power delivers exactly ``bits`` ENOB (paper
+    Fig. 9 operating points).  Falls back to N=1 when the precision is
+    optically infeasible (OperatingPoint itself refuses infeasible
+    points; this entry keeps the historical lenient behavior for the
+    accuracy-surface sweeps that deliberately cross the RIN cliff).
     """
+    from repro.core import hw
     key = backend.value.replace("_bpca", "")
-    n = scalability.max_dpe_size(key, bits, data_rate_gsps)
-    return PhotonicConfig(backend=backend, bits=bits, dpe_size=max(n, 1),
-                          data_rate_gsps=data_rate_gsps, **overrides)
+    if scalability.max_dpe_size(key, bits, data_rate_gsps) < 1:
+        return PhotonicConfig(backend=backend, bits=bits, dpe_size=1,
+                              data_rate_gsps=data_rate_gsps, **overrides)
+    op = hw.OperatingPoint.design(backend.value, bits=bits,
+                                  data_rate_gsps=data_rate_gsps)
+    return op.kernel_config(backend=backend, **overrides)
 
 
 def num_chunks(k: int, cfg: PhotonicConfig) -> int:

@@ -124,6 +124,14 @@ class PhotonicConfig:
     ``dpe_size`` is N — the optical dot-product width (number of wavelengths
     = TAOMs per DPE). It is normally derived from the scalability analysis
     (core.scalability.max_dpe_size) for the chosen backend/bits/data-rate.
+
+    PhotonicConfig is the low-level carrier the kernels consume; the
+    hardware identity it shares with the scheduler's AcceleratorConfig
+    (backend, bits, N, data rate, dataflow, optics) should be DERIVED,
+    not hand-set: build both from one ``core.hw.OperatingPoint``
+    (``op.kernel_config()`` / ``op.accelerator_config()``).  The
+    executor rejects a kernel config that disagrees with the plan's
+    hardware (core.hw.check_kernel_plan_coherence).
     """
     backend: Backend = Backend.HEANA
     bits: int = 8                      # operand quantization bits B

@@ -12,6 +12,14 @@ The three layers (see ISSUE 1 / paper §4, §6.3):
   * report    — modeled latency/energy aggregated next to executed
     numerics, feeding benchmarks/autoflow.py, benchmarks/throughput.py
     and examples;
+
+Hardware is specified ONCE: pass a core.hw.OperatingPoint wherever an
+AcceleratorConfig is accepted — the plan embeds it (plan v4), the
+executor holds the kernel PhotonicConfig coherent with it, and
+executed-trace energy (ExecutionResult.energy(), LayerTrace.
+executed_energy_j, ServingEngine.stats() joules/watts) is charged from
+it via the same perf-model event accounting as the analytic figures
+(ISSUE 5).
   * serving   — batched multi-device serving engine over the compiled
     forward: power-of-two batch buckets (one pre-traced plan each, AOT
     warmup), a thread-safe micro-batcher coalescing single-image
@@ -31,9 +39,9 @@ from repro.exec.executor import (ExecutionResult, LayerTrace,
                                  lowering_fingerprint, plan_for_network,
                                  reference_forward, trace_count)
 from repro.exec.plan_cache import GLOBAL_PLAN_CACHE, PlanCache, fingerprint
-from repro.exec.report import (execution_summary, graph_summary,
-                               plan_summary, plan_table, plan_vs_fixed,
-                               render_report, save_summary,
+from repro.exec.report import (energy_summary, execution_summary,
+                               graph_summary, plan_summary, plan_table,
+                               plan_vs_fixed, render_report, save_summary,
                                serving_summary, throughput_summary)
 from repro.exec.scheduler import (CnnPlan, FrozenCandidates, LayerPlan,
                                   TileChoice, plan_layer, schedule_buckets,
@@ -52,4 +60,5 @@ __all__ = [
     "compile_cache_stats", "lowering_fingerprint",
     "plan_summary", "plan_table", "plan_vs_fixed", "execution_summary",
     "graph_summary", "render_report", "save_summary", "throughput_summary",
+    "energy_summary",
 ]

@@ -53,6 +53,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import dataflow as df
+from repro.core import hw
 from repro.core.types import PhotonicConfig
 from repro.exec import plan_cache as pc
 from repro.exec.scheduler import CnnPlan, LayerPlan
@@ -79,6 +81,14 @@ class LayerTrace:
     latency_s: float       # modeled (from the plan)
     energy_j: float        # modeled (from the plan)
     out_mean_abs: float    # executed-numerics fingerprint
+    # Executed-trace energy accounting (PR 5): the temporal folds the
+    # kernel actually ran (the tile's K chunking), the hardware ADC
+    # conversions the executed schedule implies, and the per-layer energy
+    # charged from those executed counts via core.energy — one
+    # core.perf_model.gemm_cost accounting path for modeled AND executed.
+    n_chunks: int = 0
+    adc_conversions: int = 0
+    executed_energy_j: float = 0.0
 
 
 @dataclasses.dataclass
@@ -96,11 +106,15 @@ class ExecutionResult:
     activations: Optional[List[jnp.ndarray]] = None
     _traces: Optional[List[LayerTrace]] = dataclasses.field(
         default=None, repr=False)
+    _energy: Optional[hw.TraceEnergy] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def traces(self) -> List[LayerTrace]:
         if self._traces is None:
             fp = [float(v) for v in jax.device_get(self.fingerprints)]
+            energy = self.energy()
+            acc = self.plan.acc
             self._traces = []
             for i, p in enumerate(self.plan.layers):
                 # "what actually ran": depthwise layers execute as ONE
@@ -109,11 +123,20 @@ class ExecutionResult:
                 # consistent with the tile the scheduler sized for it.
                 m, k, d = lw.LayerGemm(p.name, p.c, p.k, p.d,
                                        p.count).executed
+                # Hardware event counts behind the executed energy: ADCs
+                # are charged on the paper's grouped accounting (the
+                # fused depthwise GEMM is a host-simulation device, its
+                # structural zeros are not photonic work).
+                sch = df.schedule(df.GemmShape(p.c, p.k, p.d), p.dataflow,
+                                  acc.n, acc.m, acc.has_bpca)
                 self._traces.append(LayerTrace(
                     name=p.name, m=m, k=k, d=d,
                     dataflow=p.dataflow.value, block_m=p.tile.block_m,
                     block_d=p.tile.block_d, latency_s=p.latency_s,
-                    energy_j=p.energy_j, out_mean_abs=fp[i]))
+                    energy_j=p.energy_j, out_mean_abs=fp[i],
+                    n_chunks=p.tile.n_chunks,
+                    adc_conversions=sch.adc_conversions * p.count,
+                    executed_energy_j=energy.per_layer_j[i]))
         return self._traces
 
     @property
@@ -123,6 +146,27 @@ class ExecutionResult:
     @property
     def modeled_fps(self) -> float:
         return self.plan.fps
+
+    def energy(self) -> hw.TraceEnergy:
+        """Executed-trace energy/FPS accounting of this run (memoized).
+
+        Computed host-side from the plan's executed layer list via
+        core.hw.trace_energy — NO device sync (unlike ``traces``, which
+        materializes the numerics fingerprints): a serving loop can read
+        joules without stalling the stream.
+        """
+        if self._energy is None:
+            self._energy = hw.trace_energy(self.plan)
+        return self._energy
+
+    @property
+    def executed_energy_j(self) -> float:
+        """Total executed-trace energy for this batch (static incl.)."""
+        return self.energy().energy_j
+
+    @property
+    def executed_fps_per_watt(self) -> float:
+        return self.energy().fps_per_watt
 
     def block_until_ready(self) -> "ExecutionResult":
         """Wait for the device computation (for timing/benchmarks)."""
@@ -323,6 +367,13 @@ def _validate(x: jnp.ndarray, plan: CnnPlan, cfg: PhotonicConfig,
         raise ValueError(
             "cfg.noise_enabled=True but key=None — pass a root PRNG key "
             "(per-layer keys are folded in) or set noise_enabled=False")
+    # Kernel-cfg / plan hardware coherence: a PhotonicConfig whose DPE
+    # geometry, backend or data rate disagrees with the hardware the plan
+    # was scheduled for used to execute without complaint — the numerics
+    # then silently diverged from the modeled latency/energy the result
+    # reports.  Plans carrying an OperatingPoint (plan v4) additionally
+    # pin bits and optics.
+    hw.check_kernel_plan_coherence(cfg, plan)
     # lru_cache's C implementation is safe on CPython, but the contract
     # here ("warm loop pays the graph walk once") shouldn't depend on
     # that detail: serialize on the same lock the wrapper memo uses so
@@ -440,6 +491,9 @@ def plan_for_network(params: Dict[str, jnp.ndarray],
                      **schedule_kw) -> CnnPlan:
     """Convenience: lower a runnable network's GEMM table and schedule it.
 
+    ``acc``: an AcceleratorConfig or (preferred) a core.hw.OperatingPoint
+    — the latter is embedded in the plan so the executor can hold the
+    kernel config coherent with it.
     ``in_hw``: input spatial size — an int for square images or an (H, W)
     pair for rectangular ones.
     """

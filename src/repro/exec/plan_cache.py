@@ -35,11 +35,20 @@ import warnings
 from collections import OrderedDict
 from typing import Dict, Optional
 
+# Serialized plan-entry format version.  The scheduler stamps every
+# persisted entry with it (and bakes it into the content-addressed key),
+# so a dump written by an older scheduler cleanly invalidates: ``load``
+# skips foreign-version entries instead of admitting plans whose layout
+# or semantics have since changed.  v4: plans embed the hardware
+# operating point (repro.core.hw.OperatingPoint) — pre-v4 entries carry
+# no version stamp at all and are likewise skipped.
+PLAN_FORMAT_VERSION = 4
+
 # Keys every serialized LayerPlan dict must carry to be admitted by
 # ``load`` (mirrors scheduler._plan_to_dict's output).
 _REQUIRED_ENTRY_KEYS = frozenset(
     {"c", "k", "d", "count", "dataflow", "latency_s", "energy_j",
-     "candidates", "tile", "cache_key"})
+     "candidates", "tile", "cache_key", "plan_version"})
 
 # Default bound: comfortably above the whole CNN zoo x backends x batches
 # grid (~a few hundred distinct shapes) while capping a runaway stream.
@@ -53,9 +62,10 @@ def fingerprint(payload: dict) -> str:
 
 
 def _entry_ok(key, value) -> bool:
-    """Is (key, value) a well-formed serialized plan entry?"""
+    """Is (key, value) a well-formed, current-version serialized entry?"""
     return (isinstance(key, str) and isinstance(value, dict)
             and _REQUIRED_ENTRY_KEYS.issubset(value.keys())
+            and value.get("plan_version") == PLAN_FORMAT_VERSION
             and isinstance(value.get("tile"), dict)
             and isinstance(value.get("candidates"), dict))
 
@@ -158,7 +168,16 @@ class PlanCache:
             return 0
         good: Dict[str, dict] = {k: v for k, v in entries.items()
                                  if _entry_ok(k, v)}
-        skipped = len(entries) - len(good)
+        stale = sum(1 for v in entries.values()
+                    if isinstance(v, dict)
+                    and v.get("plan_version") != PLAN_FORMAT_VERSION)
+        skipped = len(entries) - len(good) - stale
+        if stale:
+            warnings.warn(
+                f"plan cache {path!r}: skipped {stale} entries from an "
+                f"older plan format (current v{PLAN_FORMAT_VERSION}) — "
+                f"they will be re-planned and re-persisted on next dump",
+                RuntimeWarning, stacklevel=2)
         if skipped:
             warnings.warn(f"plan cache {path!r}: skipped {skipped} "
                           f"malformed entries", RuntimeWarning, stacklevel=2)

@@ -92,19 +92,32 @@ def plan_vs_fixed(plan: CnnPlan, fixed: Dict[Dataflow, float]) -> dict:
 def execution_summary(res: ExecutionResult, name: str = "",
                       numerics: Optional[dict] = None) -> dict:
     """Modeled plan totals next to executed-numerics evidence."""
+    energy = res.energy()
     out = {
         "name": name,
         "batch": res.plan.batch,
         "modeled_fps": res.plan.fps,
         "modeled_latency_s": res.plan.latency_s,
         "dataflow_mix": res.plan.mix(),
+        "executed_energy_j": energy.energy_j,
+        "executed_j_per_image": energy.j_per_image,
+        "executed_fps_per_watt": energy.fps_per_watt,
+        "energy_breakdown": {
+            f: getattr(energy.breakdown, f)
+            for f in ("laser", "dac", "adc", "tuning", "buffer",
+                      "reduction", "static")},
         "layers": [
             {"name": t.name, "m": t.m, "k": t.k, "d": t.d,
              "dataflow": t.dataflow, "tile": [t.block_m, t.block_d],
              "latency_s": t.latency_s, "energy_j": t.energy_j,
+             "executed_energy_j": t.executed_energy_j,
+             "n_chunks": t.n_chunks,
+             "adc_conversions": t.adc_conversions,
              "out_mean_abs": t.out_mean_abs}
             for t in res.traces],
     }
+    if res.plan.op is not None:
+        out["operating_point"] = res.plan.op.describe()
     if numerics:
         out["numerics"] = dict(numerics)
     return out
@@ -165,6 +178,37 @@ def serving_summary(name: str, batch_bucket: int, engine_stats: dict,
     if extras:
         out.update(extras)
     return out
+
+
+def energy_summary(name: str, op, executed, analytic,
+                   extras: Optional[dict] = None) -> dict:
+    """JSON-safe record of one executed-trace energy measurement.
+
+    ``op`` is the OperatingPoint everything was derived from, ``executed``
+    a core.hw.TraceEnergy from the executed plan, ``analytic`` the
+    perf_model.InferenceResult predicted for the same network/hardware —
+    the coherence evidence (their relative gap) rides along explicitly.
+    """
+    def rel(a, b):
+        return abs(a - b) / max(abs(b), 1e-30)
+
+    return {
+        "kind": "energy",
+        "name": name,
+        "operating_point": op.describe(),
+        "batch": executed.batch,
+        "executed_fps": executed.fps,
+        "executed_fps_per_watt": executed.fps_per_watt,
+        "executed_energy_j": executed.energy_j,
+        "executed_j_per_image": executed.j_per_image,
+        "executed_watts": executed.watts,
+        "analytic_fps": analytic.fps,
+        "analytic_fps_per_watt": analytic.fps_per_watt,
+        "analytic_energy_j": analytic.energy_j,
+        "fps_rel_gap": rel(executed.fps, analytic.fps),
+        "fpsw_rel_gap": rel(executed.fps_per_watt, analytic.fps_per_watt),
+        **({} if not extras else dict(extras)),
+    }
 
 
 def render_report(summaries: Iterable[dict]) -> str:

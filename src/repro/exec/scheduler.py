@@ -35,9 +35,10 @@ derived perf-model ``result``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core import dataflow as df
+from repro.core import hw
 from repro.core import perf_model as pm
 from repro.core.types import Dataflow
 from repro.exec import plan_cache as pc
@@ -59,7 +60,24 @@ _BLOCK_D_CANDIDATES = (128, 256)
 # v3: depthwise (count>1, d=1) layers choose their tile for the GEMM the
 # executor actually runs — the fused block-diagonal (M, kk*kk*C) @ (.., C)
 # — instead of the analytic per-group (M, kk*kk) @ (.., 1) shape.
-_PLAN_VERSION = 3
+# v4: plans embed the hardware operating point (repro.core.hw.
+# OperatingPoint): scheduling may accept an OperatingPoint directly, the
+# CnnPlan carries it for the executor's kernel-cfg coherence check, and
+# persisted entries are stamped with the format version so pre-v4 dumps
+# cleanly invalidate on load (plan_cache.PLAN_FORMAT_VERSION).
+_PLAN_VERSION = pc.PLAN_FORMAT_VERSION
+
+#: What the scheduling entry points accept as "the hardware": a bare
+#: AcceleratorConfig (legacy) or a full OperatingPoint (preferred — the
+#: plan then pins the kernel config too).
+HardwareSpec = Union[pm.AcceleratorConfig, hw.OperatingPoint]
+
+
+def _resolve_hw(spec: HardwareSpec
+                ) -> Tuple[pm.AcceleratorConfig, Optional[hw.OperatingPoint]]:
+    if isinstance(spec, hw.OperatingPoint):
+        return spec.accelerator_config(), spec
+    return spec, None
 
 
 class FrozenCandidates(dict):
@@ -144,9 +162,15 @@ class CnnPlan:
     result: pm.InferenceResult     # perf-model totals under the plan
     cache_hits: int
     cache_misses: int
+    # v4: the operating point the hardware was derived from, when the
+    # plan was scheduled from one — lets the executor pin the kernel
+    # config (bits/optics included) against the plan, and energy reports
+    # carry full provenance.  None for legacy bare-AcceleratorConfig
+    # plans (geometry-only coherence).
+    op: Optional[hw.OperatingPoint] = None
 
     def _identity(self) -> tuple:
-        return (self.layers, self.acc, self.batch, self.objective)
+        return (self.layers, self.acc, self.batch, self.objective, self.op)
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, CnnPlan):
@@ -220,6 +244,7 @@ def _plan_to_dict(p: LayerPlan) -> dict:
     d["dataflow"] = p.dataflow.value
     d.pop("name")          # content-addressed: names don't enter the cache
     d.pop("cache_hit")
+    d["plan_version"] = _PLAN_VERSION   # load-time invalidation stamp
     return d
 
 
@@ -232,11 +257,12 @@ def _plan_from_dict(d: dict, name: str, cache_hit: bool) -> LayerPlan:
                      cache_key=d["cache_key"], cache_hit=cache_hit)
 
 
-def plan_layer(layer: LayerGemm, acc: pm.AcceleratorConfig, batch: int = 1,
+def plan_layer(layer: LayerGemm, acc: HardwareSpec, batch: int = 1,
                objective: str = "latency",
                flows: Sequence[Dataflow] = tuple(Dataflow),
                cache: Optional[pc.PlanCache] = None) -> LayerPlan:
     """Schedule one layer: search dataflows x tiling, cache the result."""
+    acc, _ = _resolve_hw(acc)
     cache = cache if cache is not None else pc.GLOBAL_PLAN_CACHE
     g = df.GemmShape(layer.c * batch, layer.k, layer.d)
     key = pc.fingerprint(_cache_payload(g, layer.count, acc, objective,
@@ -264,11 +290,17 @@ def plan_layer(layer: LayerGemm, acc: pm.AcceleratorConfig, batch: int = 1,
     return plan
 
 
-def schedule_cnn(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
+def schedule_cnn(layers: Iterable[LayerGemm], acc: HardwareSpec,
                  batch: int = 1, objective: str = "latency",
                  flows: Sequence[Dataflow] = tuple(Dataflow),
                  cache: Optional[pc.PlanCache] = None) -> CnnPlan:
     """Auto-schedule a whole CNN: per-layer dataflow + tiling plan.
+
+    ``acc`` is either a bare AcceleratorConfig (legacy) or an
+    OperatingPoint (preferred): an OperatingPoint is resolved to its
+    ``accelerator_config()`` for the search AND embedded in the returned
+    plan, so the executor can verify the kernel config against the
+    hardware the plan was actually scheduled for (plan v4).
 
     The returned plan's ``result`` holds the perf-model totals (FPS,
     FPS/W, latency, energy incl. static) under the mixed dataflows —
@@ -276,20 +308,27 @@ def schedule_cnn(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
     the repo uses, so planned numbers are directly comparable to the
     fixed-dataflow figures of Figs. 11-14.
     """
+    acc, op = _resolve_hw(acc)
     cache = cache if cache is not None else pc.GLOBAL_PLAN_CACHE
     layers = list(layers)
     plans: List[LayerPlan] = [
         plan_layer(layer, acc, batch, objective, flows, cache)
         for layer in layers]
+    # Plan totals at the operating point's optics (default optics for
+    # legacy plans) — the per-layer search itself stays at default
+    # optics (dataflow_costs: the plan cache keys on the accelerator
+    # config alone), so LayerPlan.energy_j is a default-optics figure;
+    # ``result`` and hw.trace_energy are the op-coherent totals.
     result = pm.cnn_inference(layers, acc, batch,
-                              dataflows=[p.dataflow for p in plans])
+                              dataflows=[p.dataflow for p in plans],
+                              optics=op.optics if op is not None else None)
     hits = sum(1 for p in plans if p.cache_hit)
     return CnnPlan(layers=tuple(plans), acc=acc, batch=batch,
                    objective=objective, result=result,
-                   cache_hits=hits, cache_misses=len(plans) - hits)
+                   cache_hits=hits, cache_misses=len(plans) - hits, op=op)
 
 
-def schedule_buckets(layers: Iterable[LayerGemm], acc: pm.AcceleratorConfig,
+def schedule_buckets(layers: Iterable[LayerGemm], acc: HardwareSpec,
                      batches: Sequence[int], objective: str = "latency",
                      flows: Sequence[Dataflow] = tuple(Dataflow),
                      cache: Optional[pc.PlanCache] = None,

@@ -42,8 +42,11 @@ implies:
     (benchmarks/serving.py checks this on 4 virtual CPU devices);
 
   * **serving metrics** — p50/p99 request latency, sustained throughput,
-    padding-overhead fraction, and the plan/compile cache stats surfaced
-    from the existing ``stats()`` hooks.
+    padding-overhead fraction, the plan/compile cache stats surfaced
+    from the existing ``stats()`` hooks, and the photonic model's energy
+    accounting of the served stream (modeled joules per inference —
+    padding included, that's the cost of bucketing — and sustained
+    watts), derived from each bucket plan via core.hw.trace_energy.
 
 Noise: a noise-enabled engine requires a root PRNG key per ``infer`` call
 (per-chunk keys are folded in, per-layer keys inside the forward).  The
@@ -63,11 +66,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import perf_model as pm
+from repro.core import hw
 from repro.core.types import PhotonicConfig
 from repro.exec import executor as ex
 from repro.exec import plan_cache as pc
-from repro.exec.scheduler import CnnPlan, schedule_buckets
+from repro.exec.scheduler import CnnPlan, HardwareSpec, schedule_buckets
 from repro.models import cnn as cnn_mod
 
 __all__ = ["ServingEngine", "MicroBatcher", "power_of_two_buckets",
@@ -115,8 +118,13 @@ class ServingEngine:
 
     Parameters
     ----------
-    params, acc, cfg : the executor's usual weight dict, perf-model
-        AcceleratorConfig (for planning) and PhotonicConfig (numerics).
+    params, acc, cfg : the executor's usual weight dict, the hardware
+        (an AcceleratorConfig, or — preferred — a core.hw.OperatingPoint,
+        in which case ``cfg`` may be omitted and is derived coherently
+        via ``op.kernel_config()``), and the PhotonicConfig numerics.
+        A ``cfg`` whose bits/DPE geometry disagrees with the plans'
+        hardware is rejected HERE, at construction — not after the first
+        mis-modeled request.
     lowering : op-graph / legacy tuple; default small CNN.
     in_hw : input spatial size (int or (H, W)).
     max_batch : largest bucket (rounded up to a power of two).  Larger
@@ -128,13 +136,21 @@ class ServingEngine:
     plan_cache : shared PlanCache (fresh one per engine by default).
     """
 
-    def __init__(self, params: dict, acc: pm.AcceleratorConfig,
-                 cfg: PhotonicConfig, lowering=None, in_hw=16,
-                 max_batch: int = 32, impl: str = "auto",
+    def __init__(self, params: dict, acc: HardwareSpec,
+                 cfg: Optional[PhotonicConfig] = None, lowering=None,
+                 in_hw=16, max_batch: int = 32, impl: str = "auto",
                  objective: str = "latency",
                  plan_cache: Optional[pc.PlanCache] = None,
                  data_parallel: bool = False,
                  devices: Optional[Sequence] = None) -> None:
+        if cfg is None:
+            if not isinstance(acc, hw.OperatingPoint):
+                raise ValueError(
+                    "cfg is required when acc is a bare AcceleratorConfig "
+                    "— pass a PhotonicConfig, or hand the engine a "
+                    "core.hw.OperatingPoint and let it derive the kernel "
+                    "config coherently (op.kernel_config())")
+            cfg = acc.kernel_config()
         self._params = params
         self._cfg = cfg
         self._impl = impl
@@ -149,6 +165,11 @@ class ServingEngine:
         gemms = cnn_mod.lowered_gemms(params, self._lowering, self._in_hw)
         self.plans: Dict[int, CnnPlan] = schedule_buckets(
             gemms, acc, self.buckets, objective, cache=self.plan_cache)
+        # Fail fast on incoherent hardware: every bucket shares one
+        # hardware spec, so checking any plan pins cfg against all of
+        # them.  (The executor re-checks per request via _validate — this
+        # just moves the clear error to construction time.)
+        hw.check_kernel_plan_coherence(cfg, self.plans[self.buckets[0]])
         # One compiled wrapper per bucket, built up front: the jit
         # executables themselves materialize at warmup()/first call.
         self._fns = {b: ex.compiled_forward(self.plans[b], cfg,
@@ -181,6 +202,15 @@ class ServingEngine:
         self._busy_s = 0.0
         self._warm = False
         self._retraces = 0
+        # Modeled photonic energy of the executed stream: per-bucket
+        # joules/latency are precomputed once from the plans (core.hw
+        # executed-trace accounting) and accumulated per executed batch —
+        # padding slots burn real energy, so a padded bucket is charged
+        # in full (the padding overhead is visible in j_per_image).
+        self._bucket_energy = {b: hw.trace_energy(self.plans[b])
+                               for b in self.buckets}
+        self._energy_j = 0.0
+        self._model_time_s = 0.0
 
     # -- bucket plumbing -----------------------------------------------------
     @property
@@ -219,10 +249,13 @@ class ServingEngine:
         # entry point, before anything touches the compiled path.
         ex._validate(xb, self.plans[bucket], self._cfg, self._lowering, key)
         logits = self._run_bucket(xb, key, bucket)
+        te = self._bucket_energy[bucket]
         with self._lock:
             self._batches += 1
             self._padded_slots += pad
             self._executed_slots += bucket
+            self._energy_j += te.energy_j
+            self._model_time_s += te.latency_s
         return logits[:n] if pad else logits
 
     # -- public entry points -------------------------------------------------
@@ -331,6 +364,16 @@ class ServingEngine:
                 "data_parallel": self.data_parallel,
                 "n_devices": len(self.devices),
                 "warmed_up": warm,
+                # Photonic-model energy of the served stream (NOT host
+                # wall-clock electricity): joules per *real* inference —
+                # padding overhead included, that's the serving cost of
+                # bucketing — and the accelerator's sustained draw over
+                # the modeled busy time.
+                "modeled_energy_j": self._energy_j,
+                "modeled_j_per_image": (self._energy_j / self._images
+                                        if self._images else 0.0),
+                "modeled_sustained_w": (self._energy_j / self._model_time_s
+                                        if self._model_time_s > 0 else 0.0),
             }
         out["retraces_since_warmup"] = retraces if warm else None
         out["plan_cache"] = self.plan_cache.stats()

@@ -1,0 +1,330 @@
+"""Executed-trace energy accounting + kernel/plan coherence (ISSUE 5).
+
+The tentpole contract: constructing a pipeline from a single
+core.hw.OperatingPoint yields a kernel config, plan, and energy model
+that agree by construction —
+
+  * executed-trace FPS and FPS/W (hw.trace_energy over the executed
+    plan) equal the analytic perf_model.cnn_inference prediction at the
+    same per-layer dataflows, for every zoo network;
+  * a PhotonicConfig whose bits/DPE geometry disagrees with the plan's
+    hardware is REJECTED with an actionable error, through both
+    execute_cnn and ServingEngine (satellite bugfix — it used to execute
+    without complaint and silently mis-report modeled numbers);
+  * per-layer energy for resnet_mini at the default operating point is
+    pinned to tests/golden/resnet_mini_energy.json (tolerance-based,
+    analogous to the golden latency trace);
+  * plan v4: plans embed the operating point, persisted pre-v4 cache
+    entries cleanly invalidate on load, and serving stats gain
+    joules-per-inference / sustained watts.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hw
+from repro.core import perf_model as pm
+from repro.core.types import Backend, Dataflow, PhotonicConfig
+from repro.exec import (PlanCache, ServingEngine, execute_cnn,
+                        execution_summary, plan_for_network, schedule_cnn)
+from repro.exec import plan_cache as pc
+from repro.models.cnn import build_small_cnn, lowered_gemms
+from repro.models.zoo_cnn import ZOO
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "resnet_mini_energy.json")
+
+OP = hw.OperatingPoint.equal_area("heana", Dataflow.OS, 1.0,
+                                  noise_enabled=False)
+
+
+def _setup(name="resnet_mini", batch=2, seed=0, op=OP):
+    model = ZOO[name]
+    params = model.init_params(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          (batch, *model.in_hw, model.in_ch))
+    plan = plan_for_network(params, op, batch=batch, in_hw=model.in_hw,
+                            lowering=model.graph, cache=PlanCache())
+    return model, params, x, plan
+
+
+class TestExecutedTraceCoherence:
+    """Acceptance: executed-trace energy/FPS == analytic prediction, by
+    construction, for all four paper networks (+ the small CNN)."""
+
+    @pytest.mark.parametrize("name", list(ZOO))
+    def test_trace_energy_matches_cnn_inference(self, name):
+        model, params, x, plan = _setup(name)
+        res = execute_cnn(params, x, plan, OP.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        executed = res.energy()
+        analytic = pm.cnn_inference(model.gemms(params), plan.acc,
+                                    batch=2, dataflows=list(plan.dataflows))
+        assert executed.fps == pytest.approx(analytic.fps, rel=1e-9)
+        assert executed.fps_per_watt == pytest.approx(
+            analytic.fps_per_watt, rel=1e-9)
+        assert executed.energy_j == pytest.approx(analytic.energy_j,
+                                                  rel=1e-9)
+        assert executed.latency_s == pytest.approx(analytic.latency_s,
+                                                   rel=1e-9)
+
+    def test_plan_embeds_operating_point(self):
+        _, _, _, plan = _setup()
+        assert plan.op == OP
+        assert plan.acc == OP.accelerator_config()
+
+    def test_non_default_optics_stay_coherent(self):
+        """Review regression: an OperatingPoint with non-default optics
+        (different laser power -> different link budget, sigma AND laser
+        energy) must still satisfy executed == modeled — schedule_cnn
+        threads the op's optics into the plan result, trace_energy into
+        the executed side."""
+        from repro.core.types import OpticalParams
+        hot = dataclasses.replace(
+            OP, optics=dataclasses.replace(OpticalParams(),
+                                           p_laser_dbm=13.0))
+        model, params, x, plan = _setup("small_cnn", op=hot)
+        res = execute_cnn(params, x, plan, hot.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        executed = res.energy()
+        # plan totals and executed trace agree (both at the op's optics)
+        assert executed.fps_per_watt == pytest.approx(
+            plan.result.fps_per_watt, rel=1e-9)
+        assert executed.energy_j == pytest.approx(plan.result.energy_j,
+                                                  rel=1e-9)
+        # ...and both differ from the default-optics figures (the laser
+        # term doubled): the optics knob is genuinely live.
+        default_plan = _setup("small_cnn")[3]
+        assert executed.energy_j > default_plan.result.energy_j
+        # analytic cross-check at the same optics closes the loop
+        ana = pm.cnn_inference(model.gemms(params), plan.acc, batch=2,
+                               dataflows=list(plan.dataflows),
+                               optics=hot.optics)
+        assert executed.energy_j == pytest.approx(ana.energy_j, rel=1e-9)
+
+    def test_traces_carry_executed_energy(self):
+        model, params, x, plan = _setup()
+        res = execute_cnn(params, x, plan, OP.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        for t, p in zip(res.traces, plan.layers):
+            assert t.executed_energy_j > 0
+            assert t.n_chunks == p.tile.n_chunks
+            assert t.adc_conversions > 0
+            # modeled (plan) and executed energy agree per layer too
+            assert t.executed_energy_j == pytest.approx(p.energy_j,
+                                                        rel=1e-9)
+        # per-layer sum + static share == total
+        assert sum(t.executed_energy_j for t in res.traces) + \
+            res.energy().breakdown.static == \
+            pytest.approx(res.executed_energy_j, rel=1e-12)
+
+    def test_energy_does_not_sync_fingerprints(self):
+        """ExecutionResult.energy() is host-side plan accounting — it
+        must not materialize the traces (the serving no-sync contract)."""
+        model, params, x, plan = _setup()
+        res = execute_cnn(params, x, plan, OP.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        assert res.energy().energy_j > 0
+        assert res._traces is None
+
+    def test_execution_summary_reports_energy(self):
+        model, params, x, plan = _setup()
+        res = execute_cnn(params, x, plan, OP.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        s = execution_summary(res, "resnet_mini")
+        assert s["executed_energy_j"] == pytest.approx(
+            res.executed_energy_j)
+        assert s["operating_point"]["dpe_size"] == OP.n
+        assert set(s["energy_breakdown"]) == {
+            "laser", "dac", "adc", "tuning", "buffer", "reduction",
+            "static"}
+        assert all(l["executed_energy_j"] > 0 for l in s["layers"])
+
+
+class TestKernelPlanCoherenceErrors:
+    """Satellite bugfix: incoherent cfg/plan pairs raise, through both
+    entry points, with an actionable message."""
+
+    def test_execute_cnn_rejects_wrong_bits_with_op_plan(self):
+        model, params, x, plan = _setup()
+        bad = OP.kernel_config(bits=6)
+        with pytest.raises(ValueError, match="DIFFERENT hardware"):
+            execute_cnn(params, x, plan, bad, impl="ref",
+                        lowering=model.graph)
+
+    def test_execute_cnn_rejects_wrong_dpe_geometry(self):
+        model, params, x, plan = _setup()
+        bad = OP.kernel_config(dpe_size=64)
+        with pytest.raises(ValueError, match=r"N=64.*N=83|DPE size"):
+            execute_cnn(params, x, plan, bad, impl="ref",
+                        lowering=model.graph)
+
+    def test_execute_cnn_rejects_wrong_backend_and_rate(self):
+        model, params, x, plan = _setup()
+        with pytest.raises(ValueError, match="backend"):
+            execute_cnn(params, x, plan,
+                        OP.kernel_config(backend=Backend.AMW),
+                        impl="ref", lowering=model.graph)
+        with pytest.raises(ValueError, match="data rate"):
+            execute_cnn(params, x, plan,
+                        OP.kernel_config(data_rate_gsps=5.0),
+                        impl="ref", lowering=model.graph)
+
+    def test_error_message_names_the_fix(self):
+        model, params, x, plan = _setup()
+        with pytest.raises(ValueError, match="OperatingPoint"):
+            execute_cnn(params, x, plan, OP.kernel_config(bits=6),
+                        impl="ref", lowering=model.graph)
+
+    def test_legacy_plan_checks_geometry_only(self):
+        """Plans scheduled from a bare AcceleratorConfig can't pin bits
+        (no operating point) — but geometry is still enforced."""
+        model = ZOO["small_cnn"]
+        params = model.init_params(jax.random.PRNGKey(0))
+        x = jnp.zeros((2, *model.in_hw, model.in_ch))
+        acc = pm.AcceleratorConfig.equal_area("heana", Dataflow.OS, 1.0)
+        plan = plan_for_network(params, acc, batch=2, in_hw=model.in_hw,
+                                lowering=model.graph, cache=PlanCache())
+        assert plan.op is None
+        # historical bits-6 usage keeps working...
+        cfg6 = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=83,
+                              noise_enabled=False)
+        execute_cnn(params, x, plan, cfg6, impl="ref",
+                    lowering=model.graph)
+        # ...but a DPE-size mismatch is now caught
+        bad = PhotonicConfig(backend=Backend.HEANA, bits=6, dpe_size=128,
+                             noise_enabled=False)
+        with pytest.raises(ValueError, match="DPE size"):
+            execute_cnn(params, x, plan, bad, impl="ref",
+                        lowering=model.graph)
+
+    def test_exact_backend_exempt(self):
+        model, params, x, plan = _setup("small_cnn")
+        cfg = PhotonicConfig(backend=Backend.EXACT, noise_enabled=False)
+        res = execute_cnn(params, x, plan, cfg, impl="ref",
+                          lowering=model.graph)
+        assert res.logits.shape[0] == 2
+
+    def test_serving_engine_rejects_incoherent_cfg_at_construction(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="DIFFERENT hardware"):
+            ServingEngine(params,
+                          dataclasses.replace(OP, dataflow=Dataflow.OS),
+                          OP.kernel_config(bits=6), max_batch=2)
+
+    def test_serving_engine_derives_cfg_from_operating_point(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        engine = ServingEngine(params, OP, max_batch=2)
+        assert engine._cfg == OP.kernel_config()
+        out = engine.infer(jnp.zeros((1, 16, 16, 3)))
+        assert out.shape == (1, 10)
+
+    def test_serving_engine_requires_cfg_for_legacy_acc(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        acc = pm.AcceleratorConfig.equal_area("heana", Dataflow.OS, 1.0)
+        with pytest.raises(ValueError, match="cfg is required"):
+            ServingEngine(params, acc, max_batch=2)
+
+
+class TestServingEnergyStats:
+    def test_joules_per_inference_and_sustained_watts(self):
+        params = build_small_cnn(jax.random.PRNGKey(0))
+        engine = ServingEngine(params, OP, max_batch=4)
+        s0 = engine.stats()
+        assert s0["modeled_energy_j"] == 0.0
+        engine.infer(jnp.zeros((3, 16, 16, 3)))   # pads to bucket 4
+        engine.infer(jnp.zeros((1, 16, 16, 3)))   # bucket 1
+        s = engine.stats()
+        e4 = hw.trace_energy(engine.plans[4])
+        e1 = hw.trace_energy(engine.plans[1])
+        assert s["modeled_energy_j"] == pytest.approx(
+            e4.energy_j + e1.energy_j, rel=1e-12)
+        assert s["modeled_j_per_image"] == pytest.approx(
+            s["modeled_energy_j"] / 4, rel=1e-12)   # 4 real images
+        assert s["modeled_sustained_w"] == pytest.approx(
+            s["modeled_energy_j"] / (e4.latency_s + e1.latency_s),
+            rel=1e-12)
+
+
+class TestGoldenEnergyTrace:
+    """Checked-in per-layer energies for the default operating point:
+    silent changes to the event accounting (dataflow schedules, Table 3
+    constants, DAC/ADC policy) fail here."""
+
+    def _compute(self):
+        model, params, x, plan = _setup("resnet_mini", batch=2, seed=0)
+        res = execute_cnn(params, x, plan, OP.kernel_config(),
+                          impl="ref", lowering=model.graph)
+        return res, res.energy()
+
+    def test_golden_energy_matches(self):
+        with open(GOLDEN) as fh:
+            golden = json.load(fh)
+        res, te = self._compute()
+        assert [t.name for t in res.traces] == golden["layers"]
+        np.testing.assert_allclose(
+            [t.executed_energy_j for t in res.traces],
+            golden["per_layer_energy_j"], rtol=1e-6,
+            err_msg="per-layer energy drifted from the checked-in golden "
+                    "trace — if the change is intentional, regenerate "
+                    "tests/golden/resnet_mini_energy.json")
+        assert [t.adc_conversions for t in res.traces] == \
+            golden["adc_conversions"]
+        np.testing.assert_allclose(te.energy_j, golden["total_energy_j"],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(te.fps_per_watt,
+                                   golden["fps_per_watt"], rtol=1e-6)
+        gop = golden["operating_point"]
+        assert (OP.n, OP.n_dpus, OP.bits) == \
+            (gop["dpe_size"], gop["n_dpus"], gop["bits"])
+
+
+class TestPlanV4Cache:
+    def test_persisted_entries_stamped_with_version(self, tmp_path):
+        cache = PlanCache()
+        gemms = lowered_gemms(build_small_cnn(jax.random.PRNGKey(0)))
+        schedule_cnn(gemms, OP, batch=1, cache=cache)
+        path = str(tmp_path / "plans.json")
+        cache.dump(path)
+        with open(path) as fh:
+            entries = json.load(fh)
+        assert entries and all(
+            v["plan_version"] == pc.PLAN_FORMAT_VERSION
+            for v in entries.values())
+        fresh = PlanCache()
+        assert fresh.load(path) == len(entries)
+
+    def test_pre_v4_entries_cleanly_invalidate_on_load(self, tmp_path):
+        cache = PlanCache()
+        gemms = lowered_gemms(build_small_cnn(jax.random.PRNGKey(0)))
+        schedule_cnn(gemms, OP, batch=1, cache=cache)
+        path = str(tmp_path / "plans.json")
+        cache.dump(path)
+        with open(path) as fh:
+            entries = json.load(fh)
+        # simulate a v3-era dump: no version stamp at all
+        for v in entries.values():
+            del v["plan_version"]
+        with open(path, "w") as fh:
+            json.dump(entries, fh)
+        fresh = PlanCache()
+        with pytest.warns(RuntimeWarning, match="older plan format"):
+            assert fresh.load(path) == 0
+        assert len(fresh) == 0
+
+    def test_cached_plan_compares_equal_including_op(self):
+        cache = PlanCache()
+        gemms = lowered_gemms(build_small_cnn(jax.random.PRNGKey(0)))
+        p1 = schedule_cnn(gemms, OP, batch=1, cache=cache)
+        p2 = schedule_cnn(gemms, OP, batch=1, cache=cache)
+        assert p2.cache_misses == 0
+        assert p1 == p2 and hash(p1) == hash(p2)
+        # an op-less plan of the same hardware is a DIFFERENT plan
+        p3 = schedule_cnn(gemms, OP.accelerator_config(), batch=1,
+                          cache=cache)
+        assert p3 != p1
